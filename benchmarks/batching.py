@@ -1,0 +1,26 @@
+"""Paper Figs. 12-13 (appendix): time per output token vs batch size."""
+import time
+
+from benchmarks.common import make_requests, model_and_params, serve_cfg
+from repro.core.engine import Engine
+
+
+def rows():
+    model, params = model_and_params("opt-125m")
+    V = model.cfg.vocab_size
+    out = []
+    for bs in [1, 2, 4, 8]:
+        sc = serve_cfg("sequential", n_requests=bs, input_tokens=48,
+                       output_tokens=16, max_batch=bs)
+        eng = Engine(model, params, sc)
+        m0 = eng.run(make_requests(bs, 48, 4, V))          # warm
+        eng = Engine(model, params, sc)
+        m = eng.run(make_requests(bs, 48, 16, V))
+        s = m.summary()
+        decode_steps = sum(1 for k in m.step_kinds if k == "decode")
+        gen = sum(r.n_generated for r in m.requests.values())
+        out.append(dict(bench="fig12_time_per_token", x=bs,
+                        tbt_mean_ms=round((s["tbt"]["mean"] or 0) * 1e3, 3),
+                        tok_per_decode_step=round(gen / max(decode_steps, 1), 2),
+                        throughput=round(s["throughput_tok_s"], 1)))
+    return out

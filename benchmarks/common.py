@@ -1,0 +1,56 @@
+"""Shared benchmark plumbing."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ServeConfig, get_config
+from repro.core.engine import Engine, Request
+from repro.data import report_tokens
+from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+
+
+def reduced_model(arch="opt-125m"):
+    cfg = get_config(arch).reduced()
+    return Model(arch, cfg, FAMILY_MODULE[cfg.family], CACHE_KIND[cfg.family])
+
+
+_PARAMS_CACHE = {}
+
+
+def model_and_params(arch="opt-125m"):
+    if arch not in _PARAMS_CACHE:
+        m = reduced_model(arch)
+        _PARAMS_CACHE[arch] = (m, m.init(jax.random.PRNGKey(0)))
+    return _PARAMS_CACHE[arch]
+
+
+def make_requests(n, input_tokens, output_tokens, vocab, seed=0):
+    prompts = report_tokens(n, input_tokens, vocab, seed)
+    return [Request(rid=i, prompt=list(p), max_new_tokens=output_tokens)
+            for i, p in enumerate(prompts)]
+
+
+def serve_cfg(mode, *, n_requests, input_tokens, output_tokens, max_batch=8,
+              n_streams=2, prefill_chunk=32, page_size=16):
+    per_seq = (input_tokens + output_tokens) // page_size + 2
+    return ServeConfig(
+        mode=mode, max_batch=max_batch, page_size=page_size,
+        n_pages=max(256, (n_requests + 2) * per_seq + 8),
+        max_pages_per_seq=per_seq, prefill_chunk=prefill_chunk,
+        n_streams=n_streams)
+
+
+def run_workload(arch, mode, *, n_requests=8, input_tokens=64,
+                 output_tokens=16, warm=True, **kw):
+    model, params = model_and_params(arch)
+    sc = serve_cfg(mode, n_requests=n_requests, input_tokens=input_tokens,
+                   output_tokens=output_tokens, **kw)
+    if warm:  # compile outside the timed region
+        eng = Engine(model, params, sc)
+        eng.run(make_requests(2, input_tokens, 2, model.cfg.vocab_size), 200)
+    eng = Engine(model, params, sc)
+    reqs = make_requests(n_requests, input_tokens, output_tokens,
+                         model.cfg.vocab_size)
+    m = eng.run(reqs, max_steps=100_000)
+    return m.summary(), eng

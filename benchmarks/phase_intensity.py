@@ -1,0 +1,71 @@
+"""Paper Figs. 2-4: per-phase compute/bandwidth character.
+
+The paper measured SM%/DRAM% with ncu on an A10. Our TPU-target analogue
+derives, from the loop-aware cost model on the FULL opt-125m config (the
+paper's model), each phase's FLOPs, bytes and arithmetic intensity as a
+function of input/output token counts — showing prefill crossing the v5e
+ridge point (compute-bound) while decode stays far below it
+(bandwidth-bound). This is the quantitative motivation for Splitwiser.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.common.hw import TPU_V5E
+from repro.configs import get_config
+from repro.launch.costs import traced_costs
+from repro.models import transformer as T
+from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+
+RIDGE = TPU_V5E.peak_flops_bf16 / TPU_V5E.hbm_bw   # flops/byte ridge point
+
+
+def rows():
+    cfg = get_config("opt-125m")
+    model = Model("opt-125m", cfg, FAMILY_MODULE[cfg.family],
+                  CACHE_KIND[cfg.family])
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0),
+                                               jnp.bfloat16))
+    out = []
+    # --- Fig 2 analogue: prefill intensity vs input tokens ---
+    for s in [128, 256, 512, 1024, 2048]:
+        toks = jax.ShapeDtypeStruct((1, s), jnp.int32)
+        c = traced_costs(lambda p, t: T.prefill(p, cfg, t)[0], params, toks)
+        ai = c["flops"] / max(c["bytes"], 1)
+        out.append(dict(bench="fig2_prefill_intensity", x=s,
+                        flops=c["flops"], bytes=c["bytes"],
+                        arith_intensity=round(ai, 2),
+                        compute_bound=bool(ai > RIDGE)))
+    # --- Fig 3 analogue: decode intensity vs context length ---
+    ps = 16
+    for ctx in [128, 256, 512, 1024, 2048]:
+        n_pages = ctx // ps + 4
+        kpg = jax.ShapeDtypeStruct((cfg.n_layers, n_pages, ps,
+                                    cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+        bt = jax.ShapeDtypeStruct((1, ctx // ps + 1), jnp.int32)
+        lens = jax.ShapeDtypeStruct((1,), jnp.int32)
+        tok = jax.ShapeDtypeStruct((1,), jnp.int32)
+        c = traced_costs(
+            lambda p, t, k, v, b, l: T.decode(p, cfg, t, k, v, b, l)[0],
+            params, tok, kpg, kpg, bt, lens)
+        ai = c["flops"] / max(c["bytes"], 1)
+        out.append(dict(bench="fig3_decode_intensity", x=ctx,
+                        flops=c["flops"], bytes=c["bytes"],
+                        arith_intensity=round(ai, 2),
+                        compute_bound=bool(ai > RIDGE)))
+    # --- Fig 4 analogue: batching decode raises intensity sub-linearly ---
+    for b in [1, 5, 10, 20, 40]:
+        ctx, n_pages = 512, (512 // ps + 2) * 40 + 4
+        kpg = jax.ShapeDtypeStruct((cfg.n_layers, n_pages, ps,
+                                    cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)
+        bt = jax.ShapeDtypeStruct((b, ctx // ps + 1), jnp.int32)
+        lens = jax.ShapeDtypeStruct((b,), jnp.int32)
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+        c = traced_costs(
+            lambda p, t, k, v, bt_, l: T.decode(p, cfg, t, k, v, bt_, l)[0],
+            params, tok, kpg, kpg, bt, lens)
+        ai = c["flops"] / max(c["bytes"], 1)
+        out.append(dict(bench="fig4_decode_batch_intensity", x=b,
+                        flops=c["flops"], bytes=c["bytes"],
+                        arith_intensity=round(ai, 2),
+                        compute_bound=bool(ai > RIDGE)))
+    return out

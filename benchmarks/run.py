@@ -1,0 +1,89 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+
+Prints ``name,us_per_call,derived`` CSV rows plus a validation block that
+checks the paper's headline claims directionally (see EXPERIMENTS.md).
+"""
+import argparse
+import json
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import batching, kv_usage, phase_intensity, splitwiser_hf
+    from benchmarks import splitwiser_vllm
+
+    suites = [
+        ("phase_intensity", phase_intensity.rows),   # Figs 2-4
+        ("kv_usage", kv_usage.rows),                 # Figs 5, 14, 15
+        ("splitwiser_hf", splitwiser_hf.rows),       # Figs 6-9
+        ("splitwiser_vllm", splitwiser_vllm.rows),   # Figs 10-11
+        ("batching", batching.rows),                 # Figs 12-13
+    ]
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for r in rows:
+            all_rows.append(r)
+            derived = {k: v for k, v in r.items() if k not in ("bench", "x")}
+            print(f"{r['bench']}[{r['x']}],{dt_us:.0f},"
+                  f"\"{json.dumps(derived, default=str)}\"")
+
+    # ---- validation vs the paper's claims (directional) ----
+    if not args.only:
+        checks = []
+        by = lambda b: [r for r in all_rows if r["bench"] == b]
+        pf = by("fig2_prefill_intensity")
+        dc = by("fig3_decode_intensity")
+        checks.append(("prefill arithmetic intensity grows with input tokens",
+                       pf[-1]["arith_intensity"] > pf[0]["arith_intensity"]))
+        checks.append(("prefill is compute-bound at 2048 input tokens",
+                       pf[-1]["compute_bound"]))
+        checks.append(("decode stays bandwidth-bound at every context len",
+                       all(not r["compute_bound"] for r in dc)))
+        kv = by("fig5_kv_usage_vs_batch")
+        checks.append(("KV usage increases with batch size",
+                       kv[-1]["token_usage"] > kv[0]["token_usage"]))
+        f7 = by("fig7_throughput_4proc")
+        if f7:
+            checks.append(("throughput(4 streams) >= 1.1x sequential (paper: 1.1x)",
+                           f7[0]["ratio"] >= 1.1))
+        f9 = by("fig9_mps_arms")
+        if f9:
+            mps = [r for r in f9 if "fused" in str(r["x"])][0]
+            checks.append(("splitwiser+MPS reduces E2E vs sequential (paper: 18.2%)",
+                           mps["reduction_vs_seq"] > 0))
+            nomps = [r for r in f9 if "noMPS" in str(r["x"])][0]
+            checks.append(("MPS arm beats the time-sliced (no-MPS) arm "
+                           "(paper Fig 9: splitwiser alone shows no gain on A10)",
+                           mps["reduction_vs_seq"] > nomps["reduction_vs_seq"]))
+        f10 = by("fig10_elapsed")
+        if f10:
+            big = f10[-1]
+            checks.append(("MPSx2 speedup at largest batch (paper: 1.42x)",
+                           big["mps_speedup"] > 1.0))
+            checks.append(("MPx2 (time-sliced halves) does NOT beat MPS "
+                           "(paper: MPx2 < SP < MPSx2)",
+                           big["mp2_speedup"] <= big["mps_speedup"]))
+        print("\n== paper-claim validation ==")
+        ok = True
+        for msg, passed in checks:
+            print(f"[{'PASS' if passed else 'FAIL'}] {msg}")
+            ok &= bool(passed)
+        if not ok:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Figs. 6-9 (HF pipeline experiments): sequential vs Splitwiser vs
+Splitwiser+MPS, wall-clock on CPU with the reduced opt-125m.
+
+  Fig 6: total elapsed time, sequential vs splitwiser
+  Fig 7: steady-state throughput, 4 parallel streams vs sequential
+  Fig 8: E2E latency scaling #parallel streams (1/2/4/8)
+  Fig 9: + MPS arm (fused mixed batching)
+Paper claims to validate directionally: splitwiser+MPS < sequential E2E;
+throughput(4 streams) >= 1.1x sequential (§IV-B).
+"""
+from benchmarks.common import run_workload
+
+N_REQ = 12
+IN_TOK = 96
+OUT_TOK = 12
+
+
+def rows():
+    out = []
+    base, _ = run_workload("opt-125m", "sequential", n_requests=N_REQ,
+                           input_tokens=IN_TOK, output_tokens=OUT_TOK,
+                           max_batch=4)
+    out.append(dict(bench="fig6_e2e", x="sequential",
+                    wall_s=round(base["wall_s"], 3),
+                    throughput=round(base["throughput_tok_s"], 1),
+                    ttft_mean=round(base["ttft"]["mean"], 4)))
+    for streams in [1, 2, 4, 8]:
+        s, _ = run_workload("opt-125m", "splitwiser_mps", n_requests=N_REQ,
+                            input_tokens=IN_TOK, output_tokens=OUT_TOK,
+                            max_batch=4, n_streams=streams, prefill_chunk=32)
+        out.append(dict(bench="fig8_scaling_streams", x=streams,
+                        wall_s=round(s["wall_s"], 3),
+                        throughput=round(s["throughput_tok_s"], 1),
+                        speedup_vs_seq=round(base["wall_s"] / s["wall_s"], 3)))
+        if streams == 4:
+            out.append(dict(
+                bench="fig7_throughput_4proc", x="splitwiser4_vs_seq",
+                ratio=round(s["throughput_tok_s"] / base["throughput_tok_s"], 3)))
+    sw, _ = run_workload("opt-125m", "splitwiser", n_requests=N_REQ,
+                         input_tokens=IN_TOK, output_tokens=OUT_TOK,
+                         max_batch=4, n_streams=2, prefill_chunk=32)
+    mps, _ = run_workload("opt-125m", "splitwiser_mps", n_requests=N_REQ,
+                          input_tokens=IN_TOK, output_tokens=OUT_TOK,
+                          max_batch=4, n_streams=2, prefill_chunk=32)
+    out.append(dict(bench="fig9_mps_arms", x="splitwiser(noMPS)",
+                    wall_s=round(sw["wall_s"], 3),
+                    reduction_vs_seq=round(1 - sw["wall_s"] / base["wall_s"], 3)))
+    out.append(dict(bench="fig9_mps_arms", x="splitwiser+MPS(fused)",
+                    wall_s=round(mps["wall_s"], 3),
+                    reduction_vs_seq=round(1 - mps["wall_s"] / base["wall_s"], 3)))
+    return out

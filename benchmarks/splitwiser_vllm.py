@@ -1,0 +1,85 @@
+"""Paper Figs. 10-11 (vLLM experiments): SP vs MPx2 vs MPSx2.
+
+  SP    — one continuous-batching engine (vLLM default).
+  MPx2  — two engine replicas, each with HALF the resources, time-sliced
+          on the device (the paper's multiprocessing-without-MPS arm; on a
+          GPU the hardware scheduler context-switches them — here we
+          interleave their steps, which is what time-slicing is).
+  MPSx2 — both phases co-resident: our fused mixed-batching engine with
+          the FULL resources (the single-program TPU realization of MPS).
+
+Fig 10: total elapsed time to finish N requests (sweep N).
+Fig 11: per-batch latency trade-off (time per engine step under MP).
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (make_requests, model_and_params, serve_cfg)
+from repro.core.engine import Engine
+
+
+def _drain_time_sliced(engines):
+    """Interleave engine steps until all drain (GPU time-slice analogue)."""
+    t0 = time.perf_counter()
+    while any(not e.idle() for e in engines):
+        for e in engines:
+            if not e.idle():
+                e.step()
+    return time.perf_counter() - t0
+
+
+def rows(batches=(8, 16, 32)):
+    model, params = model_and_params("opt-125m")
+    V = model.cfg.vocab_size
+    IN_TOK, OUT_TOK = 96, 12
+    out = []
+    for n in batches:
+        # --- SP ---
+        sc = serve_cfg("sequential", n_requests=n, input_tokens=IN_TOK,
+                       output_tokens=OUT_TOK, max_batch=8)
+        eng = Engine(model, params, sc)
+        for r in make_requests(2, IN_TOK, 2, V):
+            eng.submit(r)
+        while not eng.idle():
+            eng.step()                              # warm the jits
+        eng = Engine(model, params, sc)
+        t0 = time.perf_counter()
+        m = eng.run(make_requests(n, IN_TOK, OUT_TOK, V))
+        sp = time.perf_counter() - t0
+        sp_step = sp / max(m.n_steps, 1)
+
+        # --- MPx2: two replicas, half resources each, time-sliced ---
+        sc2 = serve_cfg("sequential", n_requests=n // 2, input_tokens=IN_TOK,
+                        output_tokens=OUT_TOK, max_batch=4)
+        e1, e2 = Engine(model, params, sc2), Engine(model, params, sc2)
+        reqs = make_requests(n, IN_TOK, OUT_TOK, V)
+        for i, r in enumerate(reqs):
+            (e1 if i % 2 == 0 else e2).submit(r)
+        mp2 = _drain_time_sliced([e1, e2])
+        mp2_steps = e1.metrics.n_steps + e2.metrics.n_steps
+        mp2_step = mp2 / max(mp2_steps, 1)
+
+        # --- MPSx2: fused mixed batching, full resources ---
+        sc3 = serve_cfg("splitwiser_mps", n_requests=n, input_tokens=IN_TOK,
+                        output_tokens=OUT_TOK, max_batch=8, n_streams=2,
+                        prefill_chunk=32)
+        eng3 = Engine(model, params, sc3)
+        for r in make_requests(2, IN_TOK, 2, V):
+            eng3.submit(r)
+        while not eng3.idle():
+            eng3.step()
+        eng3 = Engine(model, params, sc3)
+        t0 = time.perf_counter()
+        m3 = eng3.run(make_requests(n, IN_TOK, OUT_TOK, V))
+        mps = time.perf_counter() - t0
+
+        out.append(dict(bench="fig10_elapsed", x=n, sp_s=round(sp, 3),
+                        mp2_s=round(mp2, 3), mps2_s=round(mps, 3),
+                        mps_speedup=round(sp / mps, 3),
+                        mp2_speedup=round(sp / mp2, 3)))
+        out.append(dict(bench="fig11_per_step", x=n,
+                        sp_step_ms=round(sp_step * 1e3, 3),
+                        mp2_step_ms=round(mp2_step * 1e3, 3)))
+    return out

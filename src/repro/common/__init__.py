@@ -1,0 +1,2 @@
+from repro.common.hw import TPU_V5E
+from repro.common.tree import tree_bytes, tree_count, tree_cast, tree_map_with_path

@@ -1,0 +1,28 @@
+"""Target-hardware constants used by the roofline analysis.
+
+The runtime container is CPU-only; TPU v5e is the *target*. All roofline
+terms in EXPERIMENTS.md are derived from compiled HLO + these constants.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float   # FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw_per_link: float   # bytes/s per link (one direction)
+    ici_links: int           # links per chip in the 2D torus
+    hbm_bytes: int           # HBM capacity per chip
+    vmem_bytes: int          # VMEM per core
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)

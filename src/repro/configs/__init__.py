@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ServeConfig, TrainConfig
+from repro.configs.registry import ARCHS, get_config, list_archs

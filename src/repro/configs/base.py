@@ -1,0 +1,160 @@
+"""Model/serving/training configuration dataclasses.
+
+One frozen `ModelConfig` covers all assigned architecture families
+(dense / moe / hybrid / ssm / enc-dec / vlm); per-arch files in this
+package instantiate it with the exact published numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                     # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    # --- attention features ---
+    rope_theta: float = 10_000.0
+    use_qk_norm: bool = False        # qwen3
+    attn_logit_softcap: Optional[float] = None   # gemma2 (50.0)
+    final_logit_softcap: Optional[float] = None  # gemma2 (30.0)
+    sliding_window: Optional[int] = None         # gemma2 local layers (4096)
+    local_global_pattern: Optional[Tuple[str, ...]] = None  # e.g. ("local","global")
+    attn_scale_override: Optional[float] = None  # gemma2 query scaling
+
+    # --- mlp ---
+    mlp_act: str = "silu"            # silu(SwiGLU) | gelu(GeGLU) | gelu_mlp (2-mat)
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1               # MoE layer frequency (1 = all layers)
+    router_aux_coef: float = 0.01
+    # expert capacity factor; reduced() sets no-drop (E/k) so prefill/decode
+    # paths are exactly equivalent in tests (capacity dropping is a real,
+    # documented property of capacity-based MoE at small batch)
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM (mamba2 / rwkv6) ---
+    ssm_state: int = 0               # mamba2 state size per head
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    rwkv_head_dim: int = 64
+    shared_attn_every: int = 0       # zamba2: a shared attn block every k mamba blocks
+    shared_attn_lora_rank: int = 0   # zamba2 per-use LoRA on the shared block
+
+    # --- enc-dec (seamless) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0             # frontend frames per utterance (stub)
+
+    # --- vlm (internvl2) ---
+    n_vision_patches: int = 0        # stub frontend: precomputed patch embeds
+    d_vision: int = 0
+
+    # --- norms / misc ---
+    norm_eps: float = 1e-6
+    post_attn_norm: bool = False     # gemma2 uses pre+post norms
+    emb_scale_by_sqrt_dim: bool = False  # gemma2
+
+    # shapes supported (used by launch/dryrun cell enumeration)
+    supports_decode: bool = True
+    supports_long_context: bool = False  # sub-quadratic archs only
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        def shrink(v, lo, cap):
+            return max(lo, min(v, cap))
+        kw = dict(
+            n_layers=shrink(self.n_layers, 2, 2),
+            d_model=64,
+            n_heads=shrink(self.n_heads, 0, 4) if self.n_heads else 0,
+            n_kv_heads=shrink(self.n_kv_heads, 0, 2) if self.n_kv_heads else 0,
+            d_ff=128,
+            vocab_size=min(self.vocab_size, 256),
+            head_dim=16 if self.n_heads else 0,
+        )
+        if self.n_experts:
+            kw["n_experts"] = min(self.n_experts, 4)
+            kw["top_k"] = min(self.top_k, 2)
+            kw["moe_capacity_factor"] = float(kw["n_experts"]) / kw["top_k"]
+        if self.ssm_state:
+            kw["ssm_state"] = min(self.ssm_state, 16)
+            kw["ssm_heads"] = min(self.ssm_heads or 4, 4)
+        if self.family == "ssm":  # rwkv6
+            kw["rwkv_head_dim"] = 16
+        if self.n_encoder_layers:
+            kw["n_encoder_layers"] = 2
+            kw["encoder_seq"] = 16
+        if self.n_vision_patches:
+            kw["n_vision_patches"] = 8
+            kw["d_vision"] = 32
+        if self.sliding_window:
+            kw["sliding_window"] = 8
+        if self.shared_attn_every:
+            kw["shared_attn_every"] = 2
+            kw["shared_attn_lora_rank"] = min(self.shared_attn_lora_rank, 4) or 4
+        if self.local_global_pattern:
+            kw["local_global_pattern"] = self.local_global_pattern
+        return dataclasses.replace(self, name=self.name + "-reduced", **kw)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Serving-engine (Splitwiser) configuration."""
+    mode: str = "splitwiser"     # sequential | splitwiser | splitwiser_mps | splitwise | mp2
+    max_batch: int = 64          # max concurrent decode sequences
+    token_budget: int = 256      # token slots per mixed step (prefill chunk + decode)
+    page_size: int = 16          # tokens per KV page
+    n_pages: int = 1024          # global page pool size
+    max_pages_per_seq: int = 64
+    max_seq_len: int = 1024
+    prefill_chunk: int = 128     # chunked-prefill chunk size in mixed mode
+    n_streams: int = 2           # parallel prompt-processing streams (paper's #processes)
+    sample_temperature: float = 0.0   # 0 => greedy
+    sample_top_k: int = 0
+    sample_top_p: float = 1.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    total_steps: int = 100
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    microbatch: int = 0          # 0 = no grad accumulation
+    remat: bool = True
+    int8_moments: bool = False   # quantized optimizer state (beyond-paper)
+    loss_impl: str = "chunked"   # chunked | vtiled (fused vocab-tiled CE)
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    seed: int = 0

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from repro.configs import (
+    qwen3_0_6b, gemma2_2b, phi4_mini_3_8b, starcoder2_3b,
+    seamless_m4t_medium, internvl2_2b, olmoe_1b_7b, grok_1_314b,
+    zamba2_7b, rwkv6_7b, opt_125m,
+)
+
+ARCHS = {
+    "qwen3-0.6b": qwen3_0_6b.CONFIG,
+    "gemma2-2b": gemma2_2b.CONFIG,
+    "phi4-mini-3.8b": phi4_mini_3_8b.CONFIG,
+    "starcoder2-3b": starcoder2_3b.CONFIG,
+    "seamless-m4t-medium": seamless_m4t_medium.CONFIG,
+    "internvl2-2b": internvl2_2b.CONFIG,
+    "olmoe-1b-7b": olmoe_1b_7b.CONFIG,
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "opt-125m": opt_125m.CONFIG,   # paper's model (not an assigned cell)
+}
+
+# The ten assigned architectures (dry-run / roofline cells).
+ASSIGNED = [a for a in ARCHS if a != "opt-125m"]
+
+
+def get_config(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: the Splitwiser phase-splitting
+# serving engine (scheduler + paged KV + mixed batching + metrics).
+from repro.core.kv_cache import PageAllocator, OutOfPages
+from repro.core.metrics import RequestMetrics, EngineMetrics

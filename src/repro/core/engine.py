@@ -1,0 +1,433 @@
+"""The Splitwiser serving engine.
+
+Modes (each maps to one of the paper's experimental arms — DESIGN.md §2):
+
+  sequential      — vLLM-style continuous batching: each engine step is
+                    EITHER a full-prompt prefill batch OR a decode batch
+                    (the paper's baseline, Fig. 6/8/10 "SP"/"Sequential").
+  splitwiser      — phase splitting with time-sliced interleave: prompt
+                    chunks and decode batches run as *separate* programs on
+                    alternating steps (the paper's PyTorch-multiprocessing-
+                    without-MPS arm; on a GPU these context-switch, Fig. 10
+                    "MPx2").
+  splitwiser_mps  — the paper's headline: both phases co-resident. On TPU
+                    this is the FUSED mixed step: decode tokens + prefill
+                    chunks share every GEMM in one XLA program (Fig. 9/10
+                    "MPSx2"; also the paper's own stated next step, mixed
+                    batching, §III-C1).
+  mp2             — two independent engine replicas with split resources
+                    (benchmarks/splitwiser_vllm.py drives this).
+
+The engine is host-driven with statically-shaped jitted steps (the TPU
+analogue of "instantiate the process once and feed it through queues",
+paper §V): P prefill streams (the paper's #processes knob) x C-token
+chunks + B decode slots.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core.kv_cache import PageAllocator
+from repro.core.metrics import EngineMetrics
+from repro.core.sampler import sample
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    out_tokens: List[int] = field(default_factory=list)
+
+
+@dataclass
+class _Stream:            # an in-progress chunked prefill (one "process")
+    req: Request
+    pos: int = 0          # tokens prefilled so far
+
+
+@dataclass
+class _Slot:              # an active decode sequence
+    req: Request
+    seq_len: int
+    next_token: int
+
+
+class Engine:
+    """Paged-KV serving engine for the transformer family (dense/moe/vlm)."""
+
+    def __init__(self, model, params, serve: ServeConfig, *, eos_id=None,
+                 time_fn=time.perf_counter):
+        assert model.cache_kind == "paged", (
+            f"Engine supports paged-cache archs; got {model.cache_kind} "
+            "(state/encdec/hybrid serve paths are exercised via launch/dryrun)")
+        self.model = model
+        self.cfg = model.cfg
+        self.serve = serve
+        self.params = params
+        self.eos_id = eos_id
+        self.now = time_fn
+        self.metrics = EngineMetrics()
+        self.alloc = PageAllocator(serve.n_pages, serve.page_size)
+        self.waiting: deque[Request] = deque()
+        self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
+        self.slots: List[Optional[_Slot]] = [None] * serve.max_batch
+        self.block_tables = np.zeros((serve.max_batch, serve.max_pages_per_seq),
+                                     np.int32)
+        self.stream_tables = np.zeros((serve.n_streams, serve.max_pages_per_seq),
+                                      np.int32)
+        dtype = jax.tree.leaves(params)[0].dtype
+        self.k_pages, self.v_pages = T.init_pages(
+            self.cfg, serve.n_pages, serve.page_size, dtype=dtype)
+        self._key = jax.random.PRNGKey(serve.seed)
+        self._step_parity = 0
+        self._build_jits()
+
+    # ------------------------------------------------------------- jits ----
+    def _build_jits(self):
+        cfg, serve = self.cfg, self.serve
+
+        def prefill_fn(params, tokens, lens):
+            last, kv = T.prefill(params, cfg, tokens)
+            # right-padded prompts: take logits at each row's last real token
+            hidden_last = last  # T.prefill returns last column; recompute below
+            return last, kv
+
+        # full prefill returning per-row last-token logits
+        def prefill_full(params, tokens, lens):
+            x = T.embed(params, cfg, tokens)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            hidden, _, kv = T.forward_hidden(params, cfg, x, positions,
+                                             collect_kv=True)
+            hl = hidden[jnp.arange(B), jnp.clip(lens - 1, 0, S - 1)]
+            return T.unembed(params, cfg, hl), kv
+
+        def commit(kpg, vpg, k_new, v_new, dest):
+            # k_new [L, M, ps, KV_p, hd]; dest [M] page ids (trash for pads)
+            return kpg.at[:, dest].set(k_new), vpg.at[:, dest].set(v_new)
+
+        def decode_fn(params, tokens, kpg, vpg, bt, lens, active):
+            return T.decode(params, cfg, tokens, kpg, vpg, bt, lens,
+                            active=active)
+
+        def mixed_fn(params, mb, kpg, vpg):
+            return T.mixed(params, cfg, mb, kpg, vpg)
+
+        self._prefill = jax.jit(prefill_full)
+        self._commit = jax.jit(commit, donate_argnums=(0, 1))
+        self._decode = jax.jit(decode_fn, donate_argnums=(2, 3))
+        self._mixed = jax.jit(mixed_fn, donate_argnums=(2, 3))
+
+    # ------------------------------------------------------------ public ---
+    def submit(self, req: Request):
+        req.arrival = req.arrival or self.now()
+        self.waiting.append(req)
+        m = self.metrics.req(req.rid)
+        m.arrival = req.arrival
+        m.n_prompt = len(req.prompt)
+
+    def run(self, requests: List[Request], max_steps: int = 100_000) -> EngineMetrics:
+        for r in requests:
+            self.submit(r)
+        self.metrics.t_start = self.now()
+        steps = 0
+        while not self.idle() and steps < max_steps:
+            self.step()
+            steps += 1
+        self.metrics.t_end = self.now()
+        return self.metrics
+
+    def idle(self) -> bool:
+        return (not self.waiting and all(s is None for s in self.streams)
+                and all(s is None for s in self.slots))
+
+    # ------------------------------------------------------------- steps ---
+    def step(self):
+        mode = self.serve.mode
+        if mode == "sequential":
+            kind = self._step_sequential()
+        elif mode == "splitwiser":
+            kind = self._step_timesliced()
+        elif mode == "splitwiser_mps":
+            kind = self._step_fused()
+        else:
+            raise ValueError(mode)
+        self.metrics.n_steps += 1
+        self.metrics.step_kinds.append(kind)
+        self.metrics.kv_usage_trace.append(self.alloc.usage())
+
+    # --- sequential: full-prompt prefill OR decode per step -----------------
+    def _step_sequential(self) -> str:
+        batch = self._take_prefillable()
+        if batch:
+            self._do_full_prefill(batch)
+            return "prefill"
+        if any(self.slots):
+            self._do_decode()
+            return "decode"
+        return "idle"
+
+    def _take_prefillable(self) -> List[Request]:
+        out = []
+        free_slots = sum(s is None for s in self.slots)
+        budget = self.alloc.n_free
+        while self.waiting and len(out) < free_slots:
+            r = self.waiting[0]
+            need = self.alloc.pages_needed(len(r.prompt) + 1)
+            if need > budget:
+                break
+            budget -= need
+            out.append(self.waiting.popleft())
+        return out
+
+    def _do_full_prefill(self, reqs: List[Request]):
+        ps = self.serve.page_size
+        t0 = self.now()
+        S_pad = max(-(-max(len(r.prompt) for r in reqs) // ps) * ps, ps)
+        Bp = len(reqs)
+        tokens = np.zeros((Bp, S_pad), np.int32)
+        lens = np.zeros((Bp,), np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, : len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+            self.metrics.req(r.rid).t_prefill_start = t0
+        logits, (k, v) = self._prefill(self.params, jnp.asarray(tokens),
+                                       jnp.asarray(lens))
+        # commit contiguous KV into allocated pages
+        n_per = S_pad // ps
+        dest = np.full((Bp * n_per,), self.alloc.trash_page, np.int32)
+        for i, r in enumerate(reqs):
+            pages = self.alloc.alloc(r.rid, self.alloc.pages_needed(lens[i]))
+            dest[i * n_per : i * n_per + len(pages)] = pages
+        k_new = T.kv_to_pages(k, ps)
+        v_new = T.kv_to_pages(v, ps)
+        self.k_pages, self.v_pages = self._commit(
+            self.k_pages, self.v_pages, k_new, v_new, jnp.asarray(dest))
+        toks = self._sample(logits)
+        t1 = self.now()
+        for i, r in enumerate(reqs):
+            self._emit_first_token(r, int(toks[i]), int(lens[i]), t1)
+
+    def _emit_first_token(self, req: Request, tok: int, seq_len: int, t):
+        m = self.metrics.req(req.rid)
+        m.t_first_token = t
+        m.token_times.append(t)
+        m.n_generated = 1
+        req.out_tokens.append(tok)
+        if self._finished(req):
+            self._finish(req, t)
+            return
+        slot_i = self.slots.index(None)
+        self.slots[slot_i] = _Slot(req=req, seq_len=seq_len, next_token=tok)
+        bt = self.alloc.owned(req.rid)
+        self.block_tables[slot_i, :] = 0
+        self.block_tables[slot_i, : len(bt)] = bt
+
+    def _finished(self, req: Request) -> bool:
+        if len(req.out_tokens) >= req.max_new_tokens:
+            return True
+        return self.eos_id is not None and req.out_tokens and \
+            req.out_tokens[-1] == self.eos_id
+
+    def _finish(self, req: Request, t):
+        m = self.metrics.req(req.rid)
+        m.t_done = t
+        m.n_generated = len(req.out_tokens)
+        self.alloc.free(req.rid)
+
+    def _do_decode(self):
+        B = self.serve.max_batch
+        tokens = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            # grow page table if the next token starts a new page
+            new = self.alloc.extend_to(s.req.rid, s.seq_len + 1)
+            if new:
+                bt = self.alloc.owned(s.req.rid)
+                self.block_tables[i, : len(bt)] = bt
+            tokens[i] = s.next_token
+            lens[i] = s.seq_len
+            active[i] = True
+        logits, (self.k_pages, self.v_pages) = self._decode(
+            self.params, jnp.asarray(tokens), self.k_pages, self.v_pages,
+            jnp.asarray(self.block_tables), jnp.asarray(lens),
+            jnp.asarray(active))
+        toks = self._sample(logits)
+        t = self.now()
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            tok = int(toks[i])
+            s.req.out_tokens.append(tok)
+            s.seq_len += 1
+            m = self.metrics.req(s.req.rid)
+            m.token_times.append(t)
+            m.n_generated = len(s.req.out_tokens)
+            if self._finished(s.req):
+                self._finish(s.req, t)
+                self.slots[i] = None
+            else:
+                s.next_token = tok
+
+    # --- splitwiser modes ----------------------------------------------------
+    def _refill_streams(self):
+        for i in range(len(self.streams)):
+            if self.streams[i] is None and self.waiting:
+                r = self.waiting[0]
+                need = self.alloc.pages_needed(len(r.prompt) + 1)
+                if need > self.alloc.n_free:
+                    break
+                self.waiting.popleft()
+                self.streams[i] = _Stream(req=r)
+                self.metrics.req(r.rid).t_prefill_start = self.now()
+
+    def _compose_prefill(self):
+        """Build the prefill half of a mixed batch from the streams.
+
+        A stream's final chunk is only scheduled when a decode slot is
+        available for the request it completes (backpressure).
+        """
+        P, C = self.serve.n_streams, self.serve.prefill_chunk
+        p_tokens = np.zeros((P, C), np.int32)
+        p_start = np.zeros((P,), np.int32)
+        p_lens = np.zeros((P,), np.int32)
+        chunks = []
+        free_slots = sum(s is None for s in self.slots)
+        for i, st in enumerate(self.streams):
+            if st is None:
+                continue
+            n = min(C, len(st.req.prompt) - st.pos)
+            if n <= 0:
+                continue
+            if st.pos + n >= len(st.req.prompt):     # completing chunk
+                if free_slots <= 0:
+                    continue
+                free_slots -= 1
+            self.alloc.extend_to(st.req.rid, st.pos + n + 1)
+            bt = self.alloc.owned(st.req.rid)
+            self.stream_tables[i, :] = 0
+            self.stream_tables[i, : len(bt)] = bt
+            p_tokens[i, :n] = st.req.prompt[st.pos : st.pos + n]
+            p_start[i] = st.pos
+            p_lens[i] = n
+            chunks.append((i, st, n))
+        return p_tokens, p_start, p_lens, chunks
+
+    def _advance_streams(self, chunks, p_logits, t):
+        for i, st, n in chunks:
+            st.pos += n
+            if st.pos >= len(st.req.prompt):
+                tok = int(self._sample(p_logits[i : i + 1])[0])
+                self._emit_first_token(st.req, tok, len(st.req.prompt), t)
+                self.streams[i] = None
+
+    def _decode_inputs(self):
+        B = self.serve.max_batch
+        tokens = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            new = self.alloc.extend_to(s.req.rid, s.seq_len + 1)
+            if new:
+                bt = self.alloc.owned(s.req.rid)
+                self.block_tables[i, : len(bt)] = bt
+            tokens[i] = s.next_token
+            lens[i] = s.seq_len
+            active[i] = True
+        return tokens, lens, active
+
+    def _step_fused(self) -> str:
+        """splitwiser_mps: ONE program runs both phases (the contribution)."""
+        self._refill_streams()
+        p_tokens, p_start, p_lens, chunks = self._compose_prefill()
+        d_tokens, d_lens, d_active = self._decode_inputs()
+        if not chunks and not d_active.any():
+            return "idle"
+        mb = dict(
+            p_tokens=jnp.asarray(p_tokens),
+            p_table=jnp.asarray(self.stream_tables),
+            p_start=jnp.asarray(p_start),
+            p_lens=jnp.asarray(p_lens),
+            d_tokens=jnp.asarray(d_tokens),
+            d_table=jnp.asarray(self.block_tables),
+            d_lens=jnp.asarray(d_lens),
+            d_active=jnp.asarray(d_active),
+        )
+        p_logits, d_logits, (self.k_pages, self.v_pages), _ = self._mixed(
+            self.params, mb, self.k_pages, self.v_pages)
+        t = self.now()
+        self._advance_decode(d_logits, d_active, t)
+        self._advance_streams(chunks, p_logits, t)
+        return "mixed"
+
+    def _step_timesliced(self) -> str:
+        """splitwiser (no MPS): phases alternate as separate programs."""
+        self._refill_streams()
+        has_chunks = any(s is not None and s.pos < len(s.req.prompt)
+                         for s in self.streams)
+        has_decode = any(self.slots)
+        do_prefill = has_chunks and (self._step_parity == 0 or not has_decode)
+        self._step_parity ^= 1
+        if do_prefill:
+            # phase-exclusive program: prefill chunks only (B=0 decode part)
+            p_tokens, p_start, p_lens, chunks = self._compose_prefill()
+            Pmax = self.serve.max_pages_per_seq
+            mb = dict(
+                p_tokens=jnp.asarray(p_tokens),
+                p_table=jnp.asarray(self.stream_tables),
+                p_start=jnp.asarray(p_start),
+                p_lens=jnp.asarray(p_lens),
+                d_tokens=jnp.zeros((0,), jnp.int32),
+                d_table=jnp.zeros((0, Pmax), jnp.int32),
+                d_lens=jnp.zeros((0,), jnp.int32),
+                d_active=jnp.zeros((0,), bool),
+            )
+            p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
+                self.params, mb, self.k_pages, self.v_pages)
+            self._advance_streams(chunks, p_logits, self.now())
+            return "prefill_chunk"
+        if has_decode:
+            self._do_decode()
+            return "decode"
+        return "idle"
+
+    def _advance_decode(self, d_logits, d_active, t):
+        toks = self._sample(d_logits)
+        for i, s in enumerate(self.slots):
+            if s is None or not d_active[i]:
+                continue
+            tok = int(toks[i])
+            s.req.out_tokens.append(tok)
+            s.seq_len += 1
+            m = self.metrics.req(s.req.rid)
+            m.token_times.append(t)
+            m.n_generated = len(s.req.out_tokens)
+            if self._finished(s.req):
+                self._finish(s.req, t)
+                self.slots[i] = None
+            else:
+                s.next_token = tok
+
+    # ---------------------------------------------------------------- misc -
+    def _sample(self, logits):
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(sample(logits, sub,
+                                 temperature=self.serve.sample_temperature,
+                                 top_k=self.serve.sample_top_k,
+                                 top_p=self.serve.sample_top_p))

@@ -1,0 +1,75 @@
+"""Host-side paged KV-cache bookkeeping.
+
+The device-side page pool is a plain array [L, N, ps, KV_p, hd] owned by
+the engine; this module owns the allocator + per-request block tables —
+the paper's "mapping between the inference request ... and the generated
+KV-cache file" (§II-G), solved with block tables instead of files.
+
+Page N-1 is reserved as the trash page (inactive batch slots scatter
+there); it is never allocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class PageAllocator:
+    n_pages: int
+    page_size: int
+    _free: List[int] = field(default_factory=list)
+    _owned: Dict[int, List[int]] = field(default_factory=dict)  # rid -> pages
+
+    def __post_init__(self):
+        # last page reserved as trash
+        self._free = list(range(self.n_pages - 2, -1, -1))
+
+    @property
+    def trash_page(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def usage(self) -> float:
+        """KV-cache usage fraction (the paper's Fig. 5/14/15 metric)."""
+        return self.n_allocated / (self.n_pages - 1)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, rid: int, n: int) -> List[int]:
+        if len(self._free) < n:
+            raise OutOfPages(f"need {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(rid, []).extend(pages)
+        return pages
+
+    def extend_to(self, rid: int, n_tokens: int) -> List[int]:
+        """Ensure rid owns enough pages for n_tokens; returns new pages."""
+        have = len(self._owned.get(rid, []))
+        need = self.pages_needed(n_tokens) - have
+        if need <= 0:
+            return []
+        return self.alloc(rid, need)
+
+    def owned(self, rid: int) -> List[int]:
+        return self._owned.get(rid, [])
+
+    def free(self, rid: int) -> int:
+        pages = self._owned.pop(rid, [])
+        self._free.extend(reversed(pages))
+        return len(pages)

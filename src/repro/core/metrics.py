@@ -1,0 +1,73 @@
+"""The paper's performance metrics (§II-E): E2E latency, TTFT, TBT,
+throughput, plus KV-cache usage traces (Fig. 5/14/15)."""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    rid: int
+    arrival: float = 0.0
+    t_prefill_start: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+    n_prompt: int = 0
+    n_generated: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first_token is None else self.t_first_token - self.arrival
+
+    @property
+    def e2e(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.arrival
+
+    @property
+    def tbt(self) -> Optional[float]:
+        if len(self.token_times) < 2:
+            return None
+        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        return sum(gaps) / len(gaps)
+
+
+@dataclass
+class EngineMetrics:
+    requests: Dict[int, RequestMetrics] = field(default_factory=dict)
+    kv_usage_trace: List[float] = field(default_factory=list)
+    step_kinds: List[str] = field(default_factory=list)
+    t_start: float = 0.0
+    t_end: float = 0.0
+    n_steps: int = 0
+
+    def req(self, rid: int) -> RequestMetrics:
+        if rid not in self.requests:
+            self.requests[rid] = RequestMetrics(rid)
+        return self.requests[rid]
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.t_done is not None]
+        total_tokens = sum(r.n_generated for r in done)
+        wall = max(self.t_end - self.t_start, 1e-9)
+        def agg(vals):
+            vals = [v for v in vals if v is not None]
+            if not vals:
+                return {"mean": None, "p50": None, "max": None}
+            return {"mean": sum(vals) / len(vals),
+                    "p50": statistics.median(vals),
+                    "max": max(vals)}
+        return {
+            "n_done": len(done),
+            "wall_s": wall,
+            "throughput_tok_s": total_tokens / wall,
+            "ttft": agg([r.ttft for r in done]),
+            "tbt": agg([r.tbt for r in done]),
+            "e2e": agg([r.e2e for r in done]),
+            "n_steps": self.n_steps,
+            "kv_usage_peak": max(self.kv_usage_trace, default=0.0),
+            "kv_usage_mean": (sum(self.kv_usage_trace) / len(self.kv_usage_trace))
+                             if self.kv_usage_trace else 0.0,
+        }

@@ -1,0 +1,27 @@
+"""Token sampling: greedy / temperature / top-k / top-p, pure JAX."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
+def sample(logits, key, temperature=0.0, top_k=0, top_p=1.0):
+    """logits [B, V] -> tokens [B] int32. Sampling knobs are static."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if temperature == 0.0:
+        return greedy
+    lg = logits / max(temperature, 1e-6)
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    if top_p < 1.0:
+        sorted_lg = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lg, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_lg, cutoff_idx, axis=-1)
+        lg = jnp.where(lg < cutoff, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    lm_batch, make_train_data_fn, synthetic_reports, report_tokens,
+    poisson_arrivals,
+)

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: causal flash attention (prompt-phase / training).
+
+The compute-bound phase of the paper: all prompt tokens processed in
+parallel, MXU-saturating [bq*G, d] x [d, bk] tiles with online softmax in
+VMEM scratch. Supports GQA (grouped layout), sliding windows (gemma2) and
+attention-logit softcaps.
+
+Layout:
+  q [B, KV_p, T, G, d]   k/v [B, KV_p, Tk, d]
+Grid (B, KV_p, nq, nk), nk innermost; causal upper-triangle blocks are
+skipped with pl.when (half the FLOPs of a naive masked implementation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    kv_lens_ref,        # [B] scalar prefetch
+    q_ref,              # [1, 1, bq, G, d]
+    k_ref,              # [1, 1, bk, d]
+    v_ref,              # [1, 1, bk, d]
+    o_ref,              # [1, 1, bq, G, d]
+    m_ref, l_ref, acc_ref,
+    *, scale, bq, bk, window, softcap, causal,
+):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # skip blocks that are entirely above the causal diagonal or entirely
+    # outside the sliding window
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window is not None:
+        run = run & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, G, d]
+        G, d = q.shape[1], q.shape[2]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        q2 = q.reshape(bq * G, d)
+        logits = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [bq*G, bk]
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        kv_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq * G, bk), 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, (bq * G, bk), 0)
+        qp = q_start + row // G
+        mask = kv_pos < kv_lens_ref[b]
+        if causal:
+            mask &= kv_pos <= qp
+        if window is not None:
+            mask &= kv_pos > qp - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        G = o_ref.shape[3]
+        l = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / l).reshape(bq, G, -1).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,                  # [B, KV_p, T, G, d]
+    k, v,               # [B, KV_p, Tk, d]
+    kv_lens,            # [B] int32
+    *,
+    scale: float,
+    causal: bool = True,
+    window=None,
+    softcap=None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    B, KV_p, T, G, d = q.shape
+    Tk = k.shape[2]
+    bq = min(block_q, T)
+    bk = min(block_k, Tk)
+    assert T % bq == 0 and Tk % bk == 0, (T, bq, Tk, bk)
+    grid = (B, KV_p, T // bq, Tk // bk)
+
+    def q_map(b, h, iq, ik, *_):
+        return (b, h, iq, 0, 0)
+
+    def kv_map(b, h, iq, ik, *_):
+        return (b, h, ik, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, d), q_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+            pl.BlockSpec((1, 1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 128), jnp.float32),
+            pltpu.VMEM((bq * G, 128), jnp.float32),
+            pltpu.VMEM((bq * G, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, scale=scale, bq=bq, bk=bk,
+        window=None if window is None else int(window),
+        softcap=None if softcap is None else float(softcap),
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(kv_lens, q, k, v)

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: ragged paged attention (the Splitwiser serving kernel).
+
+One kernel covers BOTH inference phases:
+  * decode        — C = 1 query token per sequence (bandwidth-bound: streams
+                    the sequence's KV pages from HBM through VMEM once);
+  * chunked prefill — C = chunk query tokens attending to paged history +
+                    freshly written self KV (compute-bound).
+
+Layout / tiling:
+  q        [B, KV_p, C, G, d]   (G = q heads per kv head, padded layout)
+  k_pages  [N, ps, KV_p, d]     (page pool)
+  v_pages  [N, ps, KV_p, d]
+  block_table [B, Pmax] int32   (scalar-prefetched -> page indirection
+                                 happens in the BlockSpec index_map, i.e.
+                                 the DMA engine follows the page table)
+  kv_lens  [B] int32            valid KV length per sequence
+  q_pos    [B] int32            position of the first query row
+
+Grid (B, KV_p, Pmax): the page loop is the innermost (sequential) grid
+dimension; online-softmax state lives in VMEM scratch across it.
+VMEM working set per step: ps*d (K) + ps*d (V) + C*G*d (Q/acc) floats —
+e.g. ps=64, d=128, C*G<=256: ~64-192 KiB, comfortably inside VMEM.
+MXU work per step: (C*G, d) x (d, ps) and (C*G, ps) x (ps, d) matmuls —
+d and ps chosen as multiples of 128/64 to keep the systolic array full.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar-prefetch refs
+    block_table_ref,    # [B, Pmax]
+    kv_lens_ref,        # [B]
+    q_pos_ref,          # [B]
+    # array refs
+    q_ref,              # [1, 1, C, G, d]
+    k_ref,              # [1, ps, 1, d]
+    v_ref,              # [1, ps, 1, d]
+    o_ref,              # [1, 1, C, G, d]
+    # scratch
+    m_ref,              # [C*G, 128] f32
+    l_ref,              # [C*G, 128] f32
+    acc_ref,            # [C*G, d] f32
+    *,
+    scale: float,
+    page_size: int,
+    window: int | None,
+    softcap: float | None,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_lens_ref[b]
+    start = i * page_size
+
+    @pl.when(start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [C, G, d]
+        C, G, d = q.shape
+        k = k_ref[0, :, 0].astype(jnp.float32)               # [ps, d]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        q2 = q.reshape(C * G, d)
+        logits = jax.lax.dot_general(
+            q2, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [C*G, ps]
+        if softcap is not None:
+            logits = jnp.tanh(logits / softcap) * softcap
+        kv_pos = start + jax.lax.broadcasted_iota(jnp.int32, (C * G, page_size), 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, (C * G, page_size), 0)
+        qp = q_pos_ref[b] + row // G                         # query position
+        mask = (kv_pos < kv_len) & (kv_pos <= qp)
+        if window is not None:
+            mask &= kv_pos > qp - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=-1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(jnp.float32), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [C*G, d]
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        C, G = o_ref.shape[2], o_ref.shape[3]
+        l = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / l).reshape(C, G, -1).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q,                  # [B, KV_p, C, G, d]
+    k_pages, v_pages,   # [N, ps, KV_p, d]
+    block_table,        # [B, Pmax] int32
+    kv_lens,            # [B] int32
+    q_pos,              # [B] int32 (position of first query row per seq)
+    *,
+    scale: float,
+    window=None,
+    softcap=None,
+    interpret: bool = False,
+):
+    """Returns o [B, KV_p, C, G, d]."""
+    B, KV_p, C, G, d = q.shape
+    N, ps, _, _ = k_pages.shape
+    Pmax = block_table.shape[1]
+
+    grid = (B, KV_p, Pmax)
+
+    def q_map(b, h, i, *_):
+        return (b, h, 0, 0, 0)
+
+    def kv_map(b, h, i, block_table_ref, kv_lens_ref, q_pos_ref):
+        return (block_table_ref[b, i], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, C, G, d), q_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C, G, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((C * G, 128), jnp.float32),
+            pltpu.VMEM((C * G, 128), jnp.float32),
+            pltpu.VMEM((C * G, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, scale=scale, page_size=ps,
+        window=None if window is None else int(window),
+        softcap=None if softcap is None else float(softcap))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_table, kv_lens, q_pos, q, k_pages, v_pages)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: Mamba2 SSD chunkwise scan (zamba2 prefill hot spot).
+
+Per (batch, head) program, the chunk loop is the innermost grid dimension
+with the SSM state h [P, N] carried in VMEM scratch — the HBM traffic is
+exactly the x/B/C streams plus the y output (what the tagged jnp scan
+models). MXU work per chunk: [Q,N]x[N,Q], [Q,Q]x[Q,P], [Q,N]x[N,P],
+[P,Q]x[Q,N] matmuls with Q=chunk, P=head dim (64), N=state (64).
+
+Layouts:
+  xdt [B, H, T, P]  (dt-scaled inputs)   la [B, H, T] log-decay (<=0)
+  Bc, Cc [B, T, N]  (shared across heads)
+Outputs: y [B, H, T, P], h_final [B, H, P, N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, la_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = xdt_ref[0, 0].astype(jnp.float32)          # [Q, P]
+    la = la_ref[0, 0].astype(jnp.float32)          # [Q]
+    bq = b_ref[0].astype(jnp.float32)              # [Q, N]
+    cq = c_ref[0].astype(jnp.float32)              # [Q, N]
+    Q = x.shape[0]
+    L = jnp.cumsum(la)                             # [Q]
+    # intra-chunk: y[t] = sum_{i<=t} exp(L_t - L_i) (C_t.B_i) x_i
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    M = jnp.where(row >= col, jnp.exp(L[:, None] - L[None, :]), 0.0)
+    G = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, Q]
+    y = jax.lax.dot_general(G * M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+    # inter-chunk: y[t] += exp(L_t) C_t . h      (h [P, N])
+    ch = jax.lax.dot_general(cq, h_ref[...], (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, P]
+    y = y + ch * jnp.exp(L)[:, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    # state: h' = exp(L_last) h + sum_i exp(L_last - L_i) x_i B_i^T
+    decay = jnp.exp(L[Q - 1] - L)                  # [Q]
+    xw = x * decay[:, None]                        # [Q, P]
+    hb = jax.lax.dot_general(xw, bq, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    h_ref[...] = jnp.exp(L[Q - 1]) * h_ref[...] + hb
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hout_ref[0, 0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_chunk_scan(xdt, la, Bc, Cc, *, chunk: int = 64,
+                   interpret: bool = False):
+    """xdt [B,H,T,P]; la [B,H,T]; Bc/Cc [B,T,N] -> (y [B,H,T,P],
+    h_final [B,H,P,N]). T must be a multiple of chunk."""
+    B, H, T, P = xdt.shape
+    N = Bc.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    grid = (B, H, nc)
+
+    out_y = jax.ShapeDtypeStruct((B, H, T, P), xdt.dtype)
+    out_h = jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[out_y, out_h],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xdt, la, Bc, Cc)

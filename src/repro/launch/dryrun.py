@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape decode_32k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+
+The XLA_FLAGS line above MUST execute before any jax import (jax locks the
+device count on first init); 512 host devices back both the 16x16 and the
+2x16x16 meshes. ShapeDtypeStruct inputs -> .lower() never allocates.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.steps import SHAPES, build_cell
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "mixed_32k"]
+# mixed_32k is the extra paper-technique cell, lowered for the two MoE
+# archs + qwen3 (the Splitwiser fused step at pod scale)
+MIXED_ARCHS = {"qwen3-0.6b", "olmoe-1b-7b"}
+
+
+def run_cell(arch, shape, mesh_name, *, verbose=True):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cell, why = build_cell(arch, shape, mesh)
+    if cell is None:
+        return dict(arch=arch, shape=shape, mesh=mesh_name, status="skipped",
+                    reason=why)
+    t0 = time.time()
+    from repro.launch.shardings import named
+    jitted = jax.jit(cell["fn"], in_shardings=named(mesh, cell["in_shardings"]),
+                     donate_argnums=cell["donate"])
+    lowered = jitted.lower(*cell["args"])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    cfg = get_config(arch)
+    jaxpr = jax.make_jaxpr(cell["fn"])(*cell["args"])
+    rl = analyze(compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+                 n_devices=mesh.size, cfg=cfg, jaxpr=jaxpr,
+                 flop_divisor=cell.get("flop_divisor"))
+    row = rl.row()
+    row.update(status="ok", note=cell["note"], t_lower_s=round(t_lower, 1),
+               t_compile_s=round(t_compile, 1))
+    mem = compiled.memory_analysis()
+    row["memory_analysis"] = str(mem)
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_name}] OK "
+              f"mem/dev={row['peak_mem_GiB']:.2f}GiB "
+              f"t_c={row['t_compute_s']:.3e}s t_m={row['t_memory_s']:.3e}s "
+              f"t_coll={row['t_collective_s']:.3e}s -> {row['bottleneck']}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost: flops/dev={row['flops_per_dev']:.3e} "
+              f"bytes/dev={row['bytes_per_dev']:.3e} "
+              f"coll/dev={row['coll_bytes_per_dev']:.3e} "
+              f"useful_ratio={row['useful_ratio']:.3f}")
+    return row
+
+
+def cells_for(arch):
+    out = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    if arch in MIXED_ARCHS:
+        out.append("mixed_32k")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPE_ORDER)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s, m) for a in ASSIGNED for s in cells_for(a)
+                 for m in meshes]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    rows, failures = [], 0
+    for arch, shape, mesh_name in cells:
+        try:
+            row = run_cell(arch, shape, mesh_name)
+        except Exception as e:
+            traceback.print_exc()
+            row = dict(arch=arch, shape=shape, mesh=mesh_name,
+                       status="FAIL", error=f"{type(e).__name__}: {e}")
+            failures += 1
+        rows.append(row)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row, default=str) + "\n")
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "skipped" for r in rows)
+    print(f"\n=== dry-run: {ok} ok / {sk} skipped / {failures} FAILED "
+          f"of {len(rows)} cells ===")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() on the SPMD-partitioned module reports per-partition
+flops/bytes (verified empirically in tests/test_dryrun_small.py) -> we
+multiply by n_devices for globals and divide back for the terms.
+collective_bytes = sum of OPERAND bytes over every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+partitioned HLO (per-chip injected bytes; ring-algorithm factors are NOT
+applied — noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.common.hw import TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(?)([a-z0-9]+\[[0-9,]*\])")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(.*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from partitioned HLO text."""
+    # first pass: instruction name -> result bytes
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name = m.group(1).lstrip("%")
+            # full result type may be a tuple; grab all shapes on the lhs
+            lhs = line.split("=", 1)[1]
+            # operand list starts at the op name; take text up to the op call
+            sizes[name] = _shape_bytes(line.split("=", 1)[1].split("(", 1)[0])
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start)?\(", line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        kind = m.group(1)
+        args = line[m.end():line.rfind(")")]
+        # operands are %name or name tokens before any attribute
+        arg_part = args.split("),")[0] if ")," in args else args
+        ops = re.findall(r"%?([\w.\-]+)", arg_part.split(", channel_id")[0])
+        b = sum(sizes.get(o, 0) for o in ops if o in sizes)
+        if b == 0:
+            # fall back: result bytes of this line
+            mm = _DEF_RE.match(line)
+            if mm:
+                b = _shape_bytes(line.split("=", 1)[1].split("(", 1)[0])
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, int]
+    peak_mem_per_dev: float
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self):
+        return self.flops_per_dev / TPU_V5E.peak_flops_bf16
+
+    @property
+    def t_memory(self):
+        return self.bytes_per_dev / TPU_V5E.hbm_bw
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_dev / TPU_V5E.ici_bw_per_link
+
+    @property
+    def bottleneck(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self):
+        total = self.flops_per_dev * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def row(self):
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            t_compute_s=self.t_compute, t_memory_s=self.t_memory,
+            t_collective_s=self.t_collective, bottleneck=self.bottleneck,
+            flops_per_dev=self.flops_per_dev, bytes_per_dev=self.bytes_per_dev,
+            coll_bytes_per_dev=self.coll_bytes_per_dev,
+            peak_mem_GiB=self.peak_mem_per_dev / 2**30,
+            model_flops=self.model_flops,
+            useful_ratio=self.useful_flops_ratio,
+            coll_breakdown=self.coll_breakdown,
+        )
+
+
+def model_flops_estimate(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS: 6·N·D train / 2·N_active·D per forward token (dense
+    counting; attention excluded by convention)."""
+    from repro.launch.steps import SHAPES
+    from repro.common.tree import tree_count
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.steps import get_model
+
+    model = get_model(cfg.name)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0),
+                                               jnp.bfloat16, tp=1))
+    n_params = tree_count(params)
+    if cfg.is_moe:
+        # active = non-expert + top_k/n_experts of expert params
+        import numpy as np
+        expert = sum(int(np.prod(x.shape))
+                     for k, x in _named_leaves(params)
+                     if "/moe/" in k and "router" not in k)
+        n_active = n_params - expert + expert * cfg.top_k / cfg.n_experts
+    else:
+        n_active = n_params
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        return 6.0 * n_active * tokens
+    if sh["kind"] == "prefill":
+        return 2.0 * n_active * sh["batch"] * sh["seq"]
+    if sh["kind"] == "decode":
+        return 2.0 * n_active * sh["batch"]          # one token per seq
+    if sh["kind"] == "mixed":
+        toks = sh["streams"] * sh["chunk"] + sh["batch"]
+        return 2.0 * n_active * toks
+    return 0.0
+
+
+def _named_leaves(tree):
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        yield key, leaf
+
+
+def analyze(compiled, *, arch, shape, mesh_name, n_devices, cfg,
+            jaxpr=None, flop_divisor=None, outer_mult=1) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    FLOPs/bytes come from the loop-aware jaxpr walk (global, then divided
+    by flop_divisor — the number of devices the heavy ops are actually
+    partitioned over); collectives from the loop-aware partitioned-HLO
+    parse (already per-device). XLA's own cost_analysis is loop-blind
+    (scan bodies counted once) and kept only as a cross-check field.
+    """
+    from repro.launch.costs import collective_bytes_loop_aware, jaxpr_costs
+    div = flop_divisor or n_devices
+    if jaxpr is not None:
+        jc = jaxpr_costs(jaxpr, outer_mult=outer_mult)
+        flops = jc["flops"] / div
+        byts = jc["bytes"] / div
+    else:  # fallback: loop-blind
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_loop_aware(hlo)
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes", 0) or (
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=flops, bytes_per_dev=byts,
+        coll_bytes_per_dev=float(sum(coll.values())),
+        coll_breakdown=coll, peak_mem_per_dev=float(peak),
+        model_flops=model_flops_estimate(cfg, shape),
+    )

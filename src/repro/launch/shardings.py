@@ -1,0 +1,121 @@
+"""PartitionSpecs for every parameter/cache/input tensor, per architecture.
+
+Rules are path+shape driven and cover all six families. Two profiles:
+  * train: TP over `model`, FSDP (ZeRO) over the data axis for the second
+    weight dim + optimizer state.
+  * serve: TP over `model`; FSDP only for archs whose weights exceed
+    per-chip HBM at TP=16 (grok-1) — ZeRO-3-style per-layer gather.
+Axes that don't divide a dim are dropped (with the padding layouts in the
+models, this only happens for genuinely tiny tensors).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _parts(path):
+    return [str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path]
+
+
+def param_pspecs(shapes_tree, cfg, *, tp: int, fsdp_size: int = 1,
+                 model="model", fsdp=None):
+    """Pytree of PartitionSpec matching the params tree."""
+    M = model if tp > 1 else None      # tp=1: pure-FSDP scheme, no TP axes
+    F = fsdp if (fsdp and fsdp_size > 1) else None
+
+    def spec_for(path, leaf):
+        parts = _parts(path)
+        name = parts[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        s: list = [None] * nd
+        in_tmix = "tmix" in parts
+        in_cmix = "cmix" in parts
+        in_moe = "moe" in parts
+
+        if name in ("embed", "head"):
+            s = [M, F]
+        elif in_tmix:
+            if name in ("wr", "wk", "wv", "wg"):
+                s[-2], s[-1] = F, M
+            elif name == "wo":
+                s[-2], s[-1] = M, F
+            elif name == "u":
+                s[-2] = M
+            elif name in ("ln_x", "w0", "w_b"):
+                s[-1] = M
+            elif name == "w_a":
+                s[-2] = F
+        elif in_cmix:
+            if name == "wk":
+                s[-2], s[-1] = F, M
+            elif name == "wv":
+                s[-2], s[-1] = M, F
+            elif name == "wr":
+                s[-2] = F
+        elif in_moe:
+            E = shape[1] if nd == 4 else 0
+            if name == "router":
+                s[-2] = F
+            elif name in ("w_gate", "w_up"):
+                if E % tp == 0:
+                    s[1], s[2] = M, F          # EP: experts over model
+                else:
+                    s[2], s[3] = F, M          # expert-TP: d_ff over model
+            elif name == "w_down":
+                if E % tp == 0:
+                    s[1], s[3] = M, F
+                else:
+                    s[2], s[3] = M, F
+        elif name == "wq":                     # [.., D, H_p, hd]
+            s[-2], s[-3] = M, F
+        elif name in ("wk", "wv"):             # [.., D, KV, hd]
+            if shape[-2] % tp == 0:
+                s[-2] = M
+            s[-3] = F
+        elif name == "wo":                     # [.., H_p, hd, D]
+            s[-3], s[-1] = M, F
+        elif name in ("w_gate", "w_up", "w_in"):   # [.., D, F]
+            s[-2], s[-1] = F, M
+        elif name in ("w_down", "w_out"):      # [.., F, D]
+            s[-2], s[-1] = M, F
+        elif name in ("wz", "wx"):             # mamba [., D, d_in]
+            s[-2], s[-1] = F, M
+        elif name in ("wB", "wC", "wdt"):
+            s[-2] = F
+        elif name == "out_proj":               # mamba [., d_in, D]
+            s[-2], s[-1] = M, F
+        elif name in ("conv_x", "conv_b_x", "norm"):
+            s[-1] = M
+        elif name in ("qb", "kb", "vb"):       # zamba lora [13, r, H*hd]
+            s[-1] = M
+        elif name in ("qa", "ka", "va"):       # [13, 2D, r]
+            s[-2] = F
+        # everything else (norm scales, mixes, small biases) replicated
+
+        # drop axes that don't divide
+        for i, ax in enumerate(s):
+            if ax is None:
+                continue
+            size = tp if ax == M else fsdp_size
+            if shape[i] % size != 0:
+                s[i] = None
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes_tree)
+
+
+def opt_pspecs(param_specs):
+    """Optimizer state specs: moments mirror params; count replicated."""
+    return {"mu": param_specs, "nu": param_specs, "count": P()}
+
+
+def named(mesh, tree_of_pspecs):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,62 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 100 --batch 8 --seq 128 [--reduced]
+
+On this CPU container use --reduced (full configs are exercised via the
+dry-run). On a real TPU pod the same entry point runs the production mesh:
+    python -m repro.launch.train --arch qwen3-0.6b --mesh single ...
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.data import make_train_data_fn
+from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config on CPU")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--int8-moments", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(args.arch, cfg, FAMILY_MODULE[cfg.family],
+                  CACHE_KIND[cfg.family])
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+                       total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, microbatch=args.microbatch,
+                       int8_moments=args.int8_moments, remat=True)
+    data_fn = make_train_data_fn(cfg, tcfg)
+    trainer = Trainer(model, tcfg, data_fn)
+    print(f"arch={args.arch} ({cfg.name}) family={cfg.family} "
+          f"start_step={trainer.start_step}")
+    t0 = time.time()
+    hist = trainer.run()
+    dt = time.time() - t0
+    for step, loss in hist:
+        print(f"step {step:5d} loss {loss:.4f}")
+    n_tok = args.steps * args.batch * args.seq
+    print(f"done: {dt:.1f}s, {n_tok/dt:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

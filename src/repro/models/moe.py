@@ -1,0 +1,86 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based scatter dispatch.
+
+The `moe_apply` function is written over *local* arrays so it can run
+either directly (CPU tests, no mesh) or inside a shard_map wrapper
+(production): the caller passes the expert weights it owns plus its
+expert-id range (EP over the model axis) or full range with F-sliced
+weights (expert tensor-parallelism, used when n_experts < model axis, e.g.
+grok-1's 8 experts on a 16-way axis). Cross-shard combine = one psum of
+[T, D] done by the caller — the same all-reduce shape dense TP MLPs pay.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_apply(
+    lp: dict,                  # router [D, E]; w_gate/w_up [E_loc, D, F_loc]; w_down [E_loc, F_loc, D]
+    x,                         # [T, D] token activations
+    *,
+    n_experts: int,
+    top_k: int,
+    act,                       # callable activation (on gate)
+    expert_offset: int = 0,    # first expert id owned locally
+    capacity_factor: float = 1.25,
+    renorm_gates: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [T, D] local partial output, aux load-balance loss)."""
+    T, D = x.shape
+    E, K = n_experts, top_k
+    E_loc = lp["w_gate"].shape[0]
+
+    router_logits = jnp.einsum("td,de->te", x, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)                 # [T, E]
+    gates, eidx = jax.lax.top_k(probs, K)                          # [T, K]
+    if renorm_gates:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(math.ceil(T * K / E * capacity_factor)))
+
+    flat_e = eidx.reshape(-1)                                      # [T*K]
+    onehot = (flat_e[:, None] == jnp.arange(E, dtype=flat_e.dtype)[None]).astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                           # [T*K, E]
+    my_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*K]
+
+    local_e = flat_e - expert_offset
+    keep = (my_pos < C) & (local_e >= 0) & (local_e < E_loc)
+    n_slots = E_loc * C
+    slot = jnp.where(keep, local_e * C + my_pos, n_slots)          # overflow -> trash
+
+    x_rep = jnp.repeat(x, K, axis=0)                               # [T*K, D]
+    buf = jnp.zeros((n_slots + 1, D), x.dtype).at[slot].set(x_rep, mode="drop")
+    h = buf[:n_slots].reshape(E_loc, C, D)
+
+    g = act(jnp.einsum("ecd,edf->ecf", h, lp["w_gate"]))
+    if "w_up" in lp:
+        g = g * jnp.einsum("ecd,edf->ecf", h, lp["w_up"])
+    y_exp = jnp.einsum("ecf,efd->ecd", g, lp["w_down"]).reshape(n_slots, D)
+    y_exp = jnp.concatenate([y_exp, jnp.zeros((1, D), y_exp.dtype)], axis=0)
+
+    y_tok = y_exp[slot] * gates.reshape(-1, 1).astype(y_exp.dtype)  # [T*K, D]
+    y = y_tok.reshape(T, K, D).sum(axis=1)
+
+    # Switch-style load-balancing aux loss (computed over the full router).
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32), axis=0) * (E / K)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs) / E  # = sum(f_e * P_e) * E / E
+    return y, aux
+
+
+def moe_init(key, cfg, dtype, stack=()):
+    """Expert + router weights. Gated (w_gate/w_up) unless act == gelu_mlp."""
+    from repro.models.layers import dense_init
+    D, F, E, L = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_layers
+    ks = jax.random.split(key, 4)
+    s = tuple(stack)
+    p = {
+        "router": dense_init(ks[0], s + (D, E), D, dtype),
+        "w_gate": dense_init(ks[1], s + (E, D, F), D, dtype),
+        "w_up": dense_init(ks[2], s + (E, D, F), D, dtype),
+        "w_down": dense_init(ks[3], s + (E, F, D), F, dtype, scale=1.0 / math.sqrt(2 * L)),
+    }
+    return p

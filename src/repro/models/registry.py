@@ -1,0 +1,54 @@
+"""Model registry: maps each architecture family to its module.
+
+Families expose (at least): init_params, train_logits; decoder families
+add prefill/decode (+ mixed for the transformer family). Cache handling
+is family-specific; `cache_kind` tells the engine/launcher what to build:
+  paged        — transformer (dense/moe/vlm): paged KV
+  paged+cross  — encdec: paged self-KV + dense cross-KV
+  paged+state  — hybrid: paged KV (shared attn) + SSM/conv states
+  state        — ssm (rwkv6): recurrent state slots only
+"""
+from dataclasses import dataclass
+from typing import Any
+
+from repro.configs import get_config
+from repro.models import encdec, hybrid, rwkv, transformer
+
+FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "encdec": encdec,
+    "hybrid": hybrid,
+    "ssm": rwkv,
+}
+
+CACHE_KIND = {
+    "dense": "paged",
+    "moe": "paged",
+    "vlm": "paged",
+    "encdec": "paged+cross",
+    "hybrid": "paged+state",
+    "ssm": "state",
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    name: str
+    cfg: Any
+    module: Any
+    cache_kind: str
+
+    def init(self, key, dtype=None, tp: int = 1):
+        import jax.numpy as jnp
+        return self.module.init_params(self.cfg, key, dtype or jnp.float32, tp=tp)
+
+    def train_logits(self, params, batch, **kw):
+        return self.module.train_logits(params, self.cfg, batch, **kw)
+
+
+def get_model(arch: str, cfg=None) -> Model:
+    cfg = cfg if cfg is not None else get_config(arch)
+    mod = FAMILY_MODULE[cfg.family]
+    return Model(name=arch, cfg=cfg, module=mod, cache_kind=CACHE_KIND[cfg.family])

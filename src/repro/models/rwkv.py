@@ -1,0 +1,105 @@
+"""RWKV6 language model (attention-free; recurrent state instead of KV).
+
+Serving phases still exist: prefill = chunkwise-parallel scan (compute
+bound), decode = recurrent step (bandwidth bound: reads the full state +
+weights per token), so the Splitwiser engine drives this arch through the
+same phase-split scheduler with state-slot caches instead of KV pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.layers import dense_init, rms_norm
+from repro.models.sharding import constrain
+from repro.models.transformer import pad_vocab, unembed
+
+
+def init_params(cfg, key, dtype=jnp.float32, tp: int = 1):
+    del tp  # no attention heads to pad
+    Vp = pad_vocab(cfg.vocab_size)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": (jax.random.normal(k1, (Vp, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "ln0": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": ssm.rwkv6_init(k2, cfg, dtype, stack=(cfg.n_layers,)),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "head": (jax.random.normal(k3, (Vp, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def init_state(cfg, batch, dtype=jnp.float32):
+    shapes = ssm.rwkv6_state_shapes(cfg, batch)
+    L = cfg.n_layers
+    return {k: jnp.zeros((L,) + v, dtype) for k, v in shapes.items()}
+
+
+def forward(params, cfg, tokens, state, *, chunk=32, policy=None,
+            return_all=False, remat=False):
+    """tokens [B, T]; state stacked [L, ...]. Returns (logits, new_state)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = rms_norm(x, params["ln0"], cfg.norm_eps)
+    if policy is not None:
+        x = constrain(x, policy, "batch", "seq", None)
+
+    def body(xc, st):
+        lp, s = st
+        xc, s2 = ssm.rwkv6_layer(lp, cfg, xc, s, chunk=chunk)
+        if policy is not None:
+            xc = constrain(xc, policy, "batch", "seq", None)
+        return xc, s2
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if not return_all:
+        x = x[:, -1]
+    logits = unembed(params, cfg, x, policy)
+    return logits, new_state
+
+
+def train_logits(params, cfg, batch, *, tp=1, policy=None, moe_fn=None,
+                 remat=False, chunk=32):
+    del tp, moe_fn
+    state = init_state(cfg, batch["tokens"].shape[0],
+                       jax.tree.leaves(params)[0].dtype)
+    logits, _ = forward(params, cfg, batch["tokens"], state, chunk=chunk,
+                        policy=policy, return_all=True, remat=remat)
+    return logits, jnp.float32(0.0)
+
+
+def prefill(params, cfg, tokens, *, tp=1, policy=None, chunk=32, state=None):
+    """Returns (last_logits [B, Vp], state)."""
+    del tp
+    if state is None:
+        state = init_state(cfg, tokens.shape[0], jax.tree.leaves(params)[0].dtype)
+    return forward(params, cfg, tokens, state, chunk=chunk, policy=policy)
+
+
+def decode(params, cfg, tokens, state, *, tp=1, policy=None):
+    """tokens [B] -> (logits [B, Vp], state). One recurrent step."""
+    del tp
+    logits, st = forward(params, cfg, tokens[:, None], state, chunk=1,
+                         policy=policy)
+    return logits, st
+
+
+def mixed(params, cfg, mb, p_state, d_state, *, tp=1, policy=None):
+    """Splitwiser step for the state-cache family.
+
+    Prefill chunks and decode tokens run in one jitted program (phase
+    co-residency); the projection GEMMs are not merged across phases for
+    SSMs (documented in DESIGN.md §4 — sequence-structure ops separate the
+    phases before the GEMMs).
+    mb: p_tokens [P, C], p_lens [P]; d_tokens [B], d_active [B].
+    """
+    del tp
+    p_logits, p_state = forward(params, cfg, mb["p_tokens"], p_state,
+                                chunk=min(32, mb["p_tokens"].shape[1]),
+                                policy=policy)
+    d_logits, d_state = forward(params, cfg, mb["d_tokens"][:, None], d_state,
+                                chunk=1, policy=policy)
+    return p_logits, d_logits, p_state, d_state

@@ -1,0 +1,56 @@
+"""Logical-axis sharding policy.
+
+Model code annotates activations with *logical* axis names; the launch
+layer maps them to mesh axes. On CPU (tests / engine) policy=None and all
+annotations are no-ops, so model code never depends on a mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Policy:
+    """logical name -> mesh axis (or tuple of axes)."""
+    rules: dict = field(default_factory=dict)
+    mesh: Optional[object] = None  # jax Mesh; needed for explicit NamedSharding
+
+    def spec(self, *names: Optional[str]) -> P:
+        return P(*[self.rules.get(n) if n else None for n in names])
+
+
+def constrain(x, policy: Optional[Policy], *names: Optional[str]):
+    """with_sharding_constraint by logical dim names; identity w/o policy."""
+    if policy is None:
+        return x
+    spec = policy.spec(*names)
+    if policy.mesh is not None:
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(x, NamedSharding(policy.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# Standard rules for the production mesh. "batch"-like dims shard over the
+# data axis (and pod in the multi-pod mesh); "heads"/"ff"/"vocab"/"experts"
+# shard over the model (tensor) axis; "fsdp" optionally shards a weight dim
+# over data for ZeRO-style training.
+def make_rules(data_axes=("data",), model_axis="model", fsdp: bool = False):
+    return {
+        "batch": data_axes if len(data_axes) > 1 else data_axes[0],
+        "tokens": data_axes if len(data_axes) > 1 else data_axes[0],  # token-slot dim
+        "pages": data_axes if len(data_axes) > 1 else data_axes[0],
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "ff": model_axis,
+        "vocab": model_axis,
+        "experts": model_axis,
+        "embed": None,
+        "fsdp": (data_axes if len(data_axes) > 1 else data_axes[0]) if fsdp else None,
+        "seq": None,
+    }

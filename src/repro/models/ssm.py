@@ -1,0 +1,340 @@
+"""State-space primitives: Mamba2 (SSD) and RWKV-6 (Finch) blocks.
+
+Both are implemented twice:
+  * chunkwise-parallel form (prefill / training) — matmul-rich, the
+    compute-bound "prompt phase" of these architectures;
+  * recurrent form (decode) — O(1) state update, the bandwidth-bound
+    "token phase".
+The phase asymmetry the paper exploits therefore exists for SSMs too,
+and the Splitwiser mixed step applies (DESIGN.md §4).
+
+All decay exponentials are evaluated as exp(ΔlogP) with ΔlogP <= 0, so the
+chunkwise forms are numerically safe for any chunk length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ===================================================================== Mamba2
+# Projections are stored SEPARATELY (z/x/B/C/dt) rather than as one fused
+# in_proj: slicing a fused output dim at non-shard boundaries would force
+# GSPMD to reshard; separate tensors give clean Megatron-style TP (z/x
+# sharded on d_inner, B/C/dt small & replicated, out_proj contracts the
+# sharded dim -> one all-reduce).
+def mamba2_init(key, cfg, dtype, stack=()):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    W = cfg.ssm_conv_width
+    ks = iter(jax.random.split(key, 10))
+    s = tuple(stack)
+    return {
+        "ln": jnp.zeros(s + (D,), dtype),
+        "wz": dense_init(next(ks), s + (D, d_in), D, dtype),
+        "wx": dense_init(next(ks), s + (D, d_in), D, dtype),
+        "wB": dense_init(next(ks), s + (D, N), D, dtype),
+        "wC": dense_init(next(ks), s + (D, N), D, dtype),
+        "wdt": dense_init(next(ks), s + (D, H), D, dtype),
+        "conv_x": dense_init(next(ks), s + (W, d_in), W, dtype),
+        "conv_B": dense_init(next(ks), s + (W, N), W, dtype),
+        "conv_C": dense_init(next(ks), s + (W, N), W, dtype),
+        "conv_b_x": jnp.zeros(s + (d_in,), dtype),
+        "conv_b_B": jnp.zeros(s + (N,), dtype),
+        "conv_b_C": jnp.zeros(s + (N,), dtype),
+        "A_log": jnp.broadcast_to(jnp.log(jnp.linspace(1.0, 16.0, H)), s + (H,)).astype(dtype),
+        "D_skip": jnp.ones(s + (H,), dtype),
+        "dt_bias": jnp.broadcast_to(jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))), s + (H,)).astype(dtype),
+        "norm": jnp.zeros(s + (d_in,), dtype),
+        "out_proj": dense_init(next(ks), s + (d_in, D), d_in, dtype),
+    }
+
+
+def _mamba_proj(lp, x, cfg):
+    """x [B,T,D] -> (z [B,T,d_in], x/B/C projections, dt [B,T,H])."""
+    z = jnp.einsum("btd,de->bte", x, lp["wz"])
+    xc = jnp.einsum("btd,de->bte", x, lp["wx"])
+    Bc = jnp.einsum("btd,dn->btn", x, lp["wB"])
+    Cc = jnp.einsum("btd,dn->btn", x, lp["wC"])
+    dt = jnp.einsum("btd,dh->bth", x, lp["wdt"])
+    return z, (xc, Bc, Cc), dt
+
+
+def _causal_conv(xbc, conv_state, w, b):
+    """Depthwise causal conv. xbc [B,T,Cc]; conv_state [B,W-1,Cc] history.
+
+    Returns (y [B,T,Cc], new_state [B,W-1,Cc]).
+    """
+    W = w.shape[0]
+    full = jnp.concatenate([conv_state, xbc], axis=1)          # [B, T+W-1, Cc]
+    # y_t = sum_j w[j] * full[t+j]
+    T = xbc.shape[1]
+    y = sum(full[:, j : j + T] * w[j] for j in range(W)) + b
+    new_state = full[:, -(W - 1):] if W > 1 else conv_state
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_chunk_scan(xh, Bc, Cc, la, h0, chunk=64):
+    """SSD chunkwise scan.
+
+    xh [B,T,H,P] (already dt-scaled inputs dt_t*x_t), Bc/Cc [B,T,N],
+    la [B,T,H] log-decay (<=0), h0 [B,H,P,N].
+    Returns (y [B,T,H,P], h_out).
+    """
+    B, T, H, Pd = xh.shape
+    N = Bc.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+    nchunk = (T + pad) // chunk
+    rs = lambda t: t.reshape(B, nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xh_c, B_c, C_c, la_c = rs(xh), rs(Bc), rs(Cc), rs(la)
+
+    def ssd_vmem_body(h, xs):
+        xq, bq, cq, laq = xs                    # [B,Q,H,P], [B,Q,N], [B,Q,H]
+        laq = laq.astype(jnp.float32)
+        L = jnp.cumsum(laq, axis=1)             # [B,Q,H]
+        # intra-chunk: y[t] += sum_{i<=t} exp(L_t - L_i) (C_t.B_i) xq_i
+        M = jnp.exp(L[:, :, None, :] - L[:, None, :, :])       # [B,Q(t),Q(i),H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        M = jnp.where(tri[None, :, :, None], M, 0.0)
+        G = jnp.einsum("btn,bin->bti", cq, bq)                 # [B,Q,Q]
+        y = jnp.einsum("bti,btih,bihp->bthp", G.astype(jnp.float32),
+                       M, xq.astype(jnp.float32))
+        # inter-chunk: y[t] += exp(L_t) C_t . h0
+        y = y + jnp.einsum("btn,bhpn->bthp", cq.astype(jnp.float32),
+                           h.astype(jnp.float32)) * jnp.exp(L)[:, :, :, None]
+        # state: h_out = exp(L_last) h0 + sum_i exp(L_last - L_i) xq_i B_i^T
+        Llast = L[:, -1]                                       # [B,H]
+        decay_i = jnp.exp(Llast[:, None, :] - L)               # [B,Q,H]
+        h_new = jnp.exp(Llast)[:, :, None, None] * h.astype(jnp.float32) + jnp.einsum(
+            "bihp,bin,bih->bhpn", xq.astype(jnp.float32), bq.astype(jnp.float32), decay_i)
+        return h_new, y
+
+    h_out, ys = jax.lax.scan(ssd_vmem_body, h0.astype(jnp.float32),
+                             (xh_c, B_c, C_c, la_c))
+    y = ys.swapaxes(0, 1).reshape(B, T + pad, H, Pd)[:, :T]
+    return y.astype(xh.dtype), h_out
+
+
+def mamba2_block(lp, cfg, x, conv_state, ssm_state, chunk=64):
+    """Full-sequence (chunked) Mamba2 block. x [B,T,D].
+
+    conv_state: dict(x [B,W-1,d_in], B [B,W-1,N], C [B,W-1,N]).
+    Returns (y [B,T,D], new_conv_state, new_ssm_state).
+    """
+    H = cfg.ssm_heads
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, (xc, Bc, Cc), dt = _mamba_proj(lp, h, cfg)
+    xc, sx = _causal_conv(xc, conv_state["x"], lp["conv_x"], lp["conv_b_x"])
+    Bc, sB = _causal_conv(Bc, conv_state["B"], lp["conv_B"], lp["conv_b_B"])
+    Cc, sC = _causal_conv(Cc, conv_state["C"], lp["conv_C"], lp["conv_b_C"])
+    xh = xc.reshape(*xc.shape[:-1], H, -1)                     # [B,T,H,P]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    la = -dt * jnp.exp(lp["A_log"].astype(jnp.float32))        # [B,T,H] <= 0
+    y, ssm_state = mamba2_chunk_scan(xh * dt[..., None].astype(xh.dtype),
+                                     Bc, Cc, la, ssm_state, chunk)
+    y = y + xh * lp["D_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:-1], -1)                           # [B,T,d_in]
+    y = rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, lp["out_proj"])
+    return x + out, {"x": sx, "B": sB, "C": sC}, ssm_state
+
+
+def mamba2_decode(lp, cfg, x, conv_state, ssm_state):
+    """One-token recurrent Mamba2 step. x [B,D].
+
+    Returns (y [B,D], new_conv_state, new_ssm_state).
+    """
+    H = cfg.ssm_heads
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, (xc, Bc, Cc), dt = _mamba_proj(lp, h[:, None], cfg)
+
+    def conv1(t, s, w, b):
+        full = jnp.concatenate([s, t], axis=1)                 # [B,W,C]
+        y = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, w) + b)
+        return y, full[:, 1:]
+
+    xc, sx = conv1(xc, conv_state["x"], lp["conv_x"], lp["conv_b_x"])
+    Bc, sB = conv1(Bc, conv_state["B"], lp["conv_B"], lp["conv_b_B"])
+    Cc, sC = conv1(Cc, conv_state["C"], lp["conv_C"], lp["conv_b_C"])
+    z, dt = z[:, 0], dt[:, 0]
+    xh = xc.reshape(x.shape[0], H, -1)                         # [B,H,P]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-dt * jnp.exp(lp["A_log"].astype(jnp.float32)))  # [B,H]
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    h_new = a[..., None, None] * ssm_state.astype(jnp.float32) + jnp.einsum(
+        "bhp,bn->bhpn", xdt, Bc.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cc.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * lp["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], -1).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, lp["out_proj"])
+    return x + out, {"x": sx, "B": sB, "C": sC}, h_new.astype(ssm_state.dtype)
+
+
+def mamba2_state_shapes(cfg, batch):
+    """(conv_state shape dict, ssm_state shape)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    Pd = d_in // cfg.ssm_heads
+    W = cfg.ssm_conv_width
+    conv = {"x": (batch, W - 1, d_in), "B": (batch, W - 1, cfg.ssm_state),
+            "C": (batch, W - 1, cfg.ssm_state)}
+    return conv, (batch, cfg.ssm_heads, Pd, cfg.ssm_state)
+
+
+# ====================================================================== RWKV6
+LORA_R = 32
+
+
+def rwkv6_init(key, cfg, dtype, stack=()):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    F = cfg.d_ff
+    ks = iter(jax.random.split(key, 16))
+    s = tuple(stack)
+    L = cfg.n_layers
+    out_scale = 1.0 / math.sqrt(2 * L)
+    tmix = {
+        "mu_r": jnp.full(s + (D,), 0.5, dtype), "mu_k": jnp.full(s + (D,), 0.5, dtype),
+        "mu_v": jnp.full(s + (D,), 0.5, dtype), "mu_g": jnp.full(s + (D,), 0.5, dtype),
+        "mu_w": jnp.full(s + (D,), 0.5, dtype),
+        "w0": jnp.full(s + (D,), -2.0, dtype),
+        "w_a": dense_init(next(ks), s + (D, LORA_R), D, dtype),
+        "w_b": dense_init(next(ks), s + (LORA_R, D), LORA_R, dtype),
+        "wr": dense_init(next(ks), s + (D, D), D, dtype),
+        "wk": dense_init(next(ks), s + (D, D), D, dtype),
+        "wv": dense_init(next(ks), s + (D, D), D, dtype),
+        "wg": dense_init(next(ks), s + (D, D), D, dtype),
+        "wo": dense_init(next(ks), s + (D, D), D, dtype, out_scale),
+        "u": jnp.zeros(s + (H, hd), dtype),
+        "ln_x": jnp.zeros(s + (D,), dtype),
+    }
+    cmix = {
+        "mu_r": jnp.full(s + (D,), 0.5, dtype), "mu_k": jnp.full(s + (D,), 0.5, dtype),
+        "wr": dense_init(next(ks), s + (D, D), D, dtype),
+        "wk": dense_init(next(ks), s + (D, F), D, dtype),
+        "wv": dense_init(next(ks), s + (F, D), F, dtype, out_scale),
+    }
+    return {"ln1": jnp.zeros(s + (D,), dtype), "ln2": jnp.zeros(s + (D,), dtype),
+            "tmix": tmix, "cmix": cmix}
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def _shifted(x, x_last):
+    """x [B,T,D]; x_last [B,D] (token before this span) -> x_{t-1} per t."""
+    return jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_wkv_chunk(r, k, v, lw, u, S0, chunk=32):
+    """Chunkwise WKV with per-channel data-dependent decay.
+
+    r/k/v [B,T,H,K]; lw [B,T,H,K] log-decay (<=0); u [H,K]; S0 [B,H,K,V].
+    Returns (o [B,T,H,V], S_out). All exp args are <= 0 (safe).
+    """
+    B, T, H, K = r.shape
+    pad = (-T) % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, lw = (jnp.pad(t, z4) for t in (r, k, v, lw))
+    nchunk = (T + pad) // chunk
+    rs = lambda t: t.reshape(B, nchunk, chunk, H, K).swapaxes(0, 1)
+    rc, kc, vc, lwc = rs(r), rs(k), rs(v), rs(lw)
+
+    def wkv_vmem_body(S, xs):
+        rq, kq, vq, lq = (t.astype(jnp.float32) for t in xs)   # [B,Q,H,K]
+        L = jnp.cumsum(lq, axis=1)                             # [B,Q,H,K]
+        Lm1 = jnp.concatenate([jnp.zeros_like(L[:, :1]), L[:, :-1]], axis=1)
+        # intra: A[t,i] = sum_c r_t k_i exp(Lm1_t - L_i), i < t; diag: r.(u*k)
+        diff = Lm1[:, :, None] - L[:, None]                    # [B,Q(t),Q(i),H,K]
+        Q = rq.shape[1]
+        tri = jnp.tril(jnp.ones((Q, Q), bool), -1)
+        E = jnp.where(tri[None, :, :, None, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        A = jnp.einsum("bthk,bihk,btihk->bthi", rq, kq, E)
+        A_diag = jnp.einsum("bthk,hk,bthk->bth", rq, u.astype(jnp.float32), kq)
+        o = jnp.einsum("bthi,bihv->bthv", A, vq)
+        o = o + A_diag[..., None] * vq
+        # inter: o_t += (r_t * exp(Lm1_t)) @ S
+        o = o + jnp.einsum("bthk,bhkv->bthv", rq * jnp.exp(Lm1), S)
+        # state: S' = diag(exp(L_last)) S + sum_i exp(L_last - L_i) k_i v_i
+        Llast = L[:, -1]                                       # [B,H,K]
+        S_new = jnp.exp(Llast)[..., None] * S + jnp.einsum(
+            "bihk,bihv->bhkv", kq * jnp.exp(Llast[:, None] - L), vq)
+        return S_new, o
+
+    S_out, os = jax.lax.scan(wkv_vmem_body, S0.astype(jnp.float32),
+                             (rc, kc, vc, lwc))
+    o = os.swapaxes(0, 1).reshape(B, T + pad, H, -1)[:, :T]
+    return o, S_out
+
+
+def rwkv6_tmix(lp, cfg, x, x_last, S0, chunk=32):
+    """Time-mix over a span. x [B,T,D]; x_last [B,D]; S0 [B,H,K,V].
+
+    Returns (out [B,T,D], new_x_last [B,D], S_out).
+    """
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    xp = _shifted(x, x_last)
+    rx = _lerp(x, xp, lp["mu_r"]); kx = _lerp(x, xp, lp["mu_k"])
+    vx = _lerp(x, xp, lp["mu_v"]); gx = _lerp(x, xp, lp["mu_g"])
+    wx = _lerp(x, xp, lp["mu_w"])
+    shp = (*x.shape[:-1], H, hd)
+    r = jnp.einsum("btd,de->bte", rx, lp["wr"]).reshape(shp)
+    k = jnp.einsum("btd,de->bte", kx, lp["wk"]).reshape(shp)
+    v = jnp.einsum("btd,de->bte", vx, lp["wv"]).reshape(shp)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", gx, lp["wg"]))
+    # data-dependent per-channel decay (the Finch hallmark)
+    dw = jnp.einsum("btr,rd->btd", jnp.tanh(jnp.einsum("btd,dr->btr", wx, lp["w_a"])), lp["w_b"])
+    lw = -jnp.exp((lp["w0"] + dw).astype(jnp.float32)).reshape(shp[:-2] + (H, hd))
+    o, S_out = rwkv6_wkv_chunk(r, k, v, lw, lp["u"], S0, chunk)
+    # per-head RMS norm (RWKV's GroupNorm over heads) — TP-local on the
+    # sharded head dim
+    from repro.models.layers import head_rms_norm
+    o = head_rms_norm(o.astype(x.dtype), lp["ln_x"].reshape(H, hd), cfg.norm_eps)
+    o = o.reshape(*x.shape[:-1], D) * g.astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", o, lp["wo"])
+    return out, x[:, -1], S_out
+
+
+def rwkv6_cmix(lp, cfg, x, x_last):
+    """Channel-mix. Returns (out [B,T,D], new_x_last)."""
+    xp = _shifted(x, x_last)
+    rx = _lerp(x, xp, lp["mu_r"]); kx = _lerp(x, xp, lp["mu_k"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", rx, lp["wr"]))
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", kx, lp["wk"])))
+    return r * jnp.einsum("btf,fd->btd", kk, lp["wv"]), x[:, -1]
+
+
+def rwkv6_layer(lp, cfg, x, state, chunk=32):
+    """One RWKV6 layer over a span. state = dict(x_tm, x_cm [B,D], S [B,H,K,V])."""
+    o, x_tm, S = rwkv6_tmix(lp["tmix"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps),
+                            state["x_tm"], state["S"], chunk)
+    x = x + o
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    o2, x_cm = rwkv6_cmix(lp["cmix"], cfg, h, state["x_cm"])
+    x = x + o2
+    return x, {"x_tm": x_tm, "x_cm": x_cm, "S": S}
+
+
+def rwkv6_state_shapes(cfg, batch):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    return {"x_tm": (batch, D), "x_cm": (batch, D), "S": (batch, H, hd, hd)}

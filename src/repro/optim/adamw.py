@@ -1,0 +1,100 @@
+"""AdamW in raw JAX (no optax in this environment), with optional int8
+block-quantized moments (a distributed-optimization memory trick: cuts
+optimizer-state HBM ~7x for the grok-1-314b training shape; see
+EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+# --------------------------------------------------- int8 moment encoding --
+# Codes are SHAPE-PRESERVING (int8 with the parameter's own shape, scales
+# blocked along the last dim) so quantized moments inherit the parameter's
+# sharding spec verbatim — no SPMD resharding between the flat-quantized
+# and param-shaped layouts (which otherwise triggers involuntary full
+# rematerialization / replication collectives at grok-1 scale).
+def _q8_encode(x):
+    """x [..., n] -> (int8 codes shaped like x, f32 scales [..., nblk])."""
+    n = x.shape[-1] if x.ndim else 1
+    x2 = x.reshape(x.shape[:-1] + (n,)) if x.ndim else x.reshape(1)
+    pad = (-n) % QBLOCK if n >= QBLOCK else 0
+    blk = QBLOCK if n >= QBLOCK else n
+    xp = jnp.pad(x2, [(0, 0)] * (x2.ndim - 1) + [(0, pad)])
+    nblk = xp.shape[-1] // blk
+    blocks = xp.reshape(xp.shape[:-1] + (nblk, blk))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :n]
+    return q, scale[..., 0]
+
+
+def _q8_decode(q, scale, shape):
+    n = shape[-1] if shape else 1
+    blk = QBLOCK if n >= QBLOCK else max(n, 1)
+    pad = (-n) % blk
+    qp = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    nblk = qp.shape[-1] // blk
+    blocks = qp.reshape(qp.shape[:-1] + (nblk, blk)).astype(jnp.float32)
+    out = (blocks * scale[..., None]).reshape(qp.shape)[..., :n]
+    return out.reshape(shape)
+
+
+class Q8(NamedTuple):
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def adamw_init(params, int8_moments: bool = False):
+    def zeros_like_moment(p):
+        if int8_moments and p.ndim >= 1 and p.shape[-1] >= 2:
+            q, s = _q8_encode(jnp.zeros(p.shape, jnp.float32))
+            return Q8(q, s)
+        return jnp.zeros(p.shape, jnp.float32)
+    mu = jax.tree.map(zeros_like_moment, params)
+    nu = jax.tree.map(zeros_like_moment, params)
+    return {"mu": mu, "nu": nu, "count": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, opt_state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    """Returns (new_params, new_opt_state). Master math in fp32."""
+    count = opt_state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        int8 = isinstance(mu, Q8)
+        mu_f = _q8_decode(mu.q, mu.scale, p.shape) if int8 else mu
+        nu_f = _q8_decode(nu.q, nu.scale, p.shape) if int8 else nu
+        mu_f = b1 * mu_f + (1 - b1) * g
+        nu_f = b2 * nu_f + (1 - b2) * jnp.square(g)
+        step = (mu_f / c1) / (jnp.sqrt(nu_f / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if int8:
+            return p_new, Q8(*_q8_encode(mu_f)), Q8(*_q8_encode(nu_f))
+        return p_new, mu_f, nu_f
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(opt_state["mu"])
+    flat_nu = tdef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}

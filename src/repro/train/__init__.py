@@ -1,0 +1,2 @@
+from repro.train.losses import lm_loss, lm_loss_from_hidden
+from repro.train.trainer import Trainer, make_train_step

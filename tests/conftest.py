@@ -1,0 +1,38 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real (single-CPU) device. Multi-device sharding is validated either on a
+# (1,1) mesh in-process or in subprocesses that set
+# --xla_force_host_platform_device_count themselves (test_dryrun_small.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def reduced_model(arch):
+    from repro.configs import get_config
+    from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+    cfg = get_config(arch).reduced()
+    return Model(arch, cfg, FAMILY_MODULE[cfg.family], CACHE_KIND[cfg.family])
+
+
+def family_batch(cfg, B, T, key=1):
+    import jax.numpy as jnp
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, T), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, 16, cfg.d_model)) * 0.3
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2),
+            (B, cfg.n_vision_patches, cfg.d_vision)) * 0.3
+    return batch

@@ -1,0 +1,156 @@
+"""Hypothesis property tests on system invariants: page allocator,
+scheduler conservation, sampler, SSM chunk-invariance, quantized moments."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import OutOfPages, PageAllocator
+
+
+# ------------------------------------------------------------- allocator ---
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_allocator_never_double_allocates(data):
+    n_pages = data.draw(st.integers(8, 128))
+    ps = data.draw(st.integers(1, 32))
+    alloc = PageAllocator(n_pages, ps)
+    live = {}
+    for step in range(data.draw(st.integers(1, 40))):
+        if live and data.draw(st.booleans()):
+            rid = data.draw(st.sampled_from(sorted(live)))
+            alloc.free(rid)
+            del live[rid]
+        else:
+            rid = step + 1000
+            n = data.draw(st.integers(1, 8))
+            if alloc.can_alloc(n):
+                pages = alloc.alloc(rid, n)
+                assert len(pages) == n
+                assert alloc.trash_page not in pages
+                live[rid] = pages
+        # invariant: all live pages disjoint
+        flat = [p for ps_ in live.values() for p in ps_]
+        assert len(flat) == len(set(flat))
+        assert 0.0 <= alloc.usage() <= 1.0
+        assert alloc.n_allocated == len(flat)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 16), st.integers(1, 200))
+def test_allocator_free_returns_everything(n_pages, ps, tokens):
+    alloc = PageAllocator(n_pages, ps)
+    need = alloc.pages_needed(tokens)
+    assert need == -(-tokens // ps)
+    if need <= alloc.n_free:
+        alloc.alloc(1, need)
+        extra = alloc.extend_to(1, tokens)       # already enough
+        assert extra == []
+        alloc.free(1)
+    assert alloc.n_free == n_pages - 1
+    assert alloc.n_allocated == 0
+
+
+# --------------------------------------------------------------- sampler ---
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 50))
+def test_sampler_greedy_is_argmax(seed, B, V):
+    from repro.core.sampler import sample
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, V))
+    toks = sample(logits, jax.random.PRNGKey(seed + 1), temperature=0.0)
+    assert (np.asarray(toks) == np.asarray(logits.argmax(-1))).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_sampler_topk_support(seed):
+    from repro.core.sampler import sample
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (4, 64))
+    k = 5
+    toks = np.asarray(sample(logits, jax.random.PRNGKey(seed + 1),
+                             temperature=1.0, top_k=k))
+    topk = np.asarray(jax.lax.top_k(logits, k)[1])
+    for b in range(4):
+        assert toks[b] in topk[b]
+
+
+# --------------------------------------------------- scheduler conservation
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_engine_conserves_requests(data):
+    from conftest import reduced_model
+    from repro.configs import ServeConfig
+    from repro.core.engine import Engine, Request
+    model = reduced_model("qwen3-0.6b")
+    mode = data.draw(st.sampled_from(
+        ["sequential", "splitwiser", "splitwiser_mps"]))
+    n_req = data.draw(st.integers(1, 5))
+    params = model.init(jax.random.PRNGKey(0))
+    serve = ServeConfig(mode=mode, max_batch=3, page_size=4, n_pages=96,
+                        max_pages_per_seq=12, prefill_chunk=4, n_streams=2)
+    eng = Engine(model, params, serve)
+    rng = np.random.RandomState(data.draw(st.integers(0, 100)))
+    reqs = [Request(rid=i, prompt=list(rng.randint(2, 200, rng.randint(3, 12))),
+                    max_new_tokens=int(rng.randint(1, 6)))
+            for i in range(n_req)]
+    m = eng.run(reqs, max_steps=2000)
+    s = m.summary()
+    assert s["n_done"] == n_req                      # nothing lost or stuck
+    for r in reqs:
+        assert len(r.out_tokens) == r.max_new_tokens  # exact budget
+    assert eng.alloc.n_allocated == 0                # all pages returned
+    assert eng.idle()
+
+
+# ---------------------------------------------------------- SSM invariance
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 3), st.integers(2, 20),
+       st.sampled_from([1, 2, 3, 5, 8]))
+def test_rwkv_chunk_size_invariance(seed, B, T, chunk):
+    """Output must not depend on the chunking of the scan."""
+    from repro.configs import get_config
+    from repro.models import ssm
+    cfg = get_config("rwkv6-7b").reduced()
+    lp = ssm.rwkv6_init(jax.random.PRNGKey(seed % 7), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, T, cfg.d_model)) * 0.3
+    st0 = {k: jnp.zeros(v) for k, v in ssm.rwkv6_state_shapes(cfg, B).items()}
+    y1, s1 = ssm.rwkv6_layer(lp, cfg, x, st0, chunk=chunk)
+    y2, s2 = ssm.rwkv6_layer(lp, cfg, x, st0, chunk=T)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1["S"]), np.asarray(s2["S"]),
+                               atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 16), st.sampled_from([1, 2, 4, 7]))
+def test_mamba_chunk_size_invariance(seed, T, chunk):
+    from repro.configs import get_config
+    from repro.models import ssm
+    cfg = get_config("zamba2-7b").reduced()
+    lp = ssm.mamba2_init(jax.random.PRNGKey(seed % 5), cfg, jnp.float32)
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, T, cfg.d_model)) * 0.3
+    cs, ss = ssm.mamba2_state_shapes(cfg, B)
+    c0 = {k: jnp.zeros(v) for k, v in cs.items()}
+    s0 = jnp.zeros(ss)
+    y1, _, h1 = ssm.mamba2_block(lp, cfg, x, c0, s0, chunk=chunk)
+    y2, _, h2 = ssm.mamba2_block(lp, cfg, x, c0, s0, chunk=T)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+# --------------------------------------------------------- int8 moments ---
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_q8_roundtrip_error_bounded(seed):
+    from repro.optim.adamw import QBLOCK, _q8_decode, _q8_encode
+    n = 1000
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,)))
+    q, s = _q8_encode(jnp.asarray(x))
+    back = np.asarray(_q8_decode(q, s, (n,)))
+    pad = (-n) % QBLOCK
+    err = np.pad(np.abs(back - x), (0, pad)).reshape(-1, QBLOCK)
+    scales = np.asarray(s).reshape(-1)
+    for i in range(len(scales)):
+        # quantization error bounded by half a code step per block
+        assert (err[i] <= scales[i] * 0.5 + 1e-9).all()

@@ -1,0 +1,147 @@
+"""Serve-path equivalences: prefill/decode/mixed must match the full
+forward oracle for every family (the system's core correctness invariant:
+paged KV + chunked prefill + recurrent states are exact, not approximate).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.models import encdec, hybrid, rwkv
+from repro.models import transformer as T
+
+
+def _pool_from_prefill(k, v, ps, extra=6):
+    kpg = T.kv_to_pages(k, ps)
+    vpg = T.kv_to_pages(v, ps)
+    L, N0 = kpg.shape[:2]
+    pad = jnp.zeros((L, extra) + kpg.shape[2:], kpg.dtype)
+    return jnp.concatenate([kpg, pad], 1), jnp.concatenate([vpg, pad], 1), N0
+
+
+def _tables(B, S, ps, N0, width=8):
+    per = S // ps
+    bt = np.zeros((B, width), np.int32)
+    for b in range(B):
+        bt[b, :per] = np.arange(per) + b * per
+        bt[b, per] = N0 + b
+    return jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-2b", "olmoe-1b-7b",
+                                  "starcoder2-3b", "internvl2-2b"])
+def test_decode_matches_full_forward(arch):
+    model = reduced_model(arch)
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, ps = 2, 16, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    patches = None
+    if cfg.family == "vlm":
+        patches = jax.random.normal(jax.random.PRNGKey(2),
+                                    (B, cfg.n_vision_patches, cfg.d_vision)) * 0.3
+    last, (k, v) = T.prefill(params, cfg, toks, patches=patches)
+    kpg, vpg, N0 = _pool_from_prefill(k, v, ps)
+    S_tot = k.shape[2]
+    bt = _tables(B, S_tot, ps, N0)
+    lens = jnp.full((B,), S_tot, jnp.int32)
+    nxt = last.argmax(-1).astype(jnp.int32)
+    dl, _ = T.decode(params, cfg, nxt, kpg, vpg, bt, lens)
+    batch = {"tokens": jnp.concatenate([toks, nxt[:, None]], 1)}
+    if patches is not None:
+        batch["patches"] = patches
+    fl, _ = T.train_logits(params, cfg, batch)
+    err = float(jnp.abs(dl - fl[:, -1]).max())
+    assert err < 2e-3, (arch, err)
+
+
+def test_mixed_chunked_prefill_matches_full():
+    model = reduced_model("qwen3-0.6b")
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, ps, C = 1, 16, 4, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full_last, _ = T.prefill(params, cfg, toks)
+    kpg, vpg = T.init_pages(cfg, 16, ps)
+    bt = jnp.asarray([[0, 1, 2, 3, 4, 5]], jnp.int32)
+    out = None
+    for i in range(S // C):
+        mb = dict(p_tokens=toks[:, i * C:(i + 1) * C], p_table=bt,
+                  p_start=jnp.asarray([i * C], jnp.int32),
+                  p_lens=jnp.asarray([C], jnp.int32),
+                  d_tokens=jnp.zeros((2,), jnp.int32),
+                  d_table=jnp.zeros((2, 6), jnp.int32),
+                  d_lens=jnp.zeros((2,), jnp.int32),
+                  d_active=jnp.zeros((2,), bool))
+        out, _, (kpg, vpg), _ = T.mixed(params, cfg, mb, kpg, vpg)
+    err = float(jnp.abs(out[0] - full_last[0]).max())
+    assert err < 2e-3, err
+
+
+def test_encdec_decode_matches_full():
+    model = reduced_model("seamless-m4t-medium")
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, ps = 2, 8, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    frames = jax.random.normal(jax.random.PRNGKey(2), (B, 12, cfg.d_model)) * 0.3
+    last, (k, v), (xk, xv) = encdec.prefill(params, cfg, frames, toks)
+    kpg, vpg, N0 = _pool_from_prefill(k, v, ps)
+    bt = _tables(B, S, ps, N0)
+    nxt = last.argmax(-1).astype(jnp.int32)
+    dl, _ = encdec.decode(params, cfg, nxt, kpg, vpg, xk, xv, bt,
+                          jnp.full((B,), S, jnp.int32))
+    fl, _ = encdec.train_logits(params, cfg, {
+        "frames": frames, "tokens": jnp.concatenate([toks, nxt[:, None]], 1)})
+    assert float(jnp.abs(dl - fl[:, -1]).max()) < 2e-3
+
+
+def test_hybrid_decode_matches_full():
+    model = reduced_model("zamba2-7b")
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, ps = 2, 8, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    last, (k, v), (conv, sst) = hybrid.prefill(params, cfg, toks)
+    kpg, vpg, N0 = _pool_from_prefill(k, v, ps)
+    bt = _tables(B, S, ps, N0)
+    nxt = last.argmax(-1).astype(jnp.int32)
+    dl, _, _ = hybrid.decode(params, cfg, nxt, conv, sst, kpg, vpg, bt,
+                             jnp.full((B,), S, jnp.int32))
+    fl, _ = hybrid.train_logits(params, cfg, {
+        "tokens": jnp.concatenate([toks, nxt[:, None]], 1)})
+    assert float(jnp.abs(dl - fl[:, -1]).max()) < 2e-3
+
+
+def test_rwkv_decode_matches_full():
+    model = reduced_model("rwkv6-7b")
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    last, st = rwkv.prefill(params, cfg, toks)
+    nxt = last.argmax(-1).astype(jnp.int32)
+    dl, st = rwkv.decode(params, cfg, nxt, st)
+    fl, _ = rwkv.train_logits(params, cfg, {
+        "tokens": jnp.concatenate([toks, nxt[:, None]], 1)})
+    assert float(jnp.abs(dl - fl[:, -1]).max()) < 2e-3
+
+
+def test_gemma2_sliding_window_masks_old_tokens():
+    """Local layers must not attend beyond the window."""
+    from repro.models.layers import flash_attention
+    B, T, H, d = 1, 12, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, T, H, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, d))
+    pos = jnp.arange(T)[None]
+    o_w = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          scale=1.0, window=4, block_kv=4)
+    # perturb a kv pair far outside every query's window: position 0 vs
+    # query at position 11 (window 4)
+    k2 = k.at[:, 0].add(10.0)
+    v2 = v.at[:, 0].add(10.0)
+    o_w2 = flash_attention(q, k2, v2, q_positions=pos, kv_positions=pos,
+                           scale=1.0, window=4, block_kv=4)
+    assert jnp.allclose(o_w[:, 11], o_w2[:, 11], atol=1e-5)
+    assert not jnp.allclose(o_w[:, 2], o_w2[:, 2], atol=1e-5)

@@ -1,0 +1,33 @@
+"""SSD chunk-scan Pallas kernel vs the ssm.mamba2_chunk_scan oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_chunk_scan
+from repro.models.ssm import mamba2_chunk_scan
+
+
+@pytest.mark.parametrize("case", [
+    # B, H, T, P, N, chunk
+    (2, 3, 32, 16, 8, 8),
+    (1, 2, 64, 32, 16, 16),
+    (2, 1, 24, 8, 8, 8),
+])
+def test_ssd_kernel_vs_oracle(case):
+    B, H, T, P, N, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xdt = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    Bc = jax.random.normal(ks[1], (B, T, N)) * 0.5
+    Cc = jax.random.normal(ks[2], (B, T, N)) * 0.5
+    la = -jnp.abs(jax.random.normal(ks[3], (B, T, H))) * 0.1
+
+    h0 = jnp.zeros((B, H, P, N))
+    want_y, want_h = mamba2_chunk_scan(xdt, Bc, Cc, la, h0, chunk=chunk)
+
+    y, h = ssd_chunk_scan(xdt.transpose(0, 2, 1, 3),
+                          la.transpose(0, 2, 1), Bc, Cc, chunk=chunk,
+                          interpret=True)
+    y = y.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want_h), atol=1e-4)
