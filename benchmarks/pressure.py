@@ -1,0 +1,59 @@
+"""Graceful degradation under KV pressure (beyond the paper's figures).
+
+The paper's Figs. 5/14/15 show KV-cache usage climbing toward exhaustion
+as batch size grows; this scenario pushes past it: an oversubscribed
+page pool (~45% of the workload's total KV need) with generations that
+far outgrow the pages reserved at admission.  The seed engine died with
+``OutOfPages`` from the decode path here; the scheduler subsystem
+(watermark admission + preemption by recomputation) completes every
+request in all three modes, trading preemptions/latency for survival.
+Each row also reruns the mode with ``preempt_policy="none"`` to document
+the seed crash.
+"""
+import dataclasses
+
+from benchmarks.common import make_requests, model_and_params
+from repro.configs import ServeConfig
+from repro.core.engine import Engine
+from repro.core.kv_cache import OutOfPages
+
+N_REQ, INPUT, OUTPUT = 6, 24, 48
+MODES = ["sequential", "splitwiser", "splitwiser_mps"]
+
+
+def _serve(mode):
+    # per-request full need: (24+48)/8 = 9 pages; pool of 24 usable pages
+    # holds < 3 of the 6 concurrent sequences
+    return ServeConfig(mode=mode, max_batch=8, page_size=8, n_pages=25,
+                       max_pages_per_seq=12, prefill_chunk=16, n_streams=2)
+
+
+def rows():
+    model, params = model_and_params("opt-125m")
+    vocab = model.cfg.vocab_size
+    out = []
+    for mode in MODES:
+        seed_cfg = dataclasses.replace(_serve(mode), preempt_policy="none",
+                                       watermark=0.0, decode_reserve=0.0)
+        seed_crash = False
+        try:
+            Engine(model, params, seed_cfg).run(
+                make_requests(N_REQ, INPUT, OUTPUT, vocab), max_steps=20_000)
+        except OutOfPages:
+            seed_crash = True
+        eng = Engine(model, params, _serve(mode))
+        reqs = make_requests(N_REQ, INPUT, OUTPUT, vocab)
+        s = eng.run(reqs, max_steps=20_000).summary()
+        out.append(dict(
+            bench="pressure_oversubscribed", x=mode,
+            n_requests=N_REQ, n_done=s["n_done"],
+            all_complete=all(len(r.out_tokens) == OUTPUT for r in reqs),
+            seed_crash=seed_crash,
+            n_preemptions=s["n_preemptions"],
+            n_preempted_requests=s["n_preempted_requests"],
+            throughput_tok_s=round(s["throughput_tok_s"], 1),
+            kv_usage_peak=round(s["kv_usage_peak"], 4),
+            e2e_p50=None if s["e2e"]["p50"] is None
+                    else round(s["e2e"]["p50"], 4),
+        ))
+    return out

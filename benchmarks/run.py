@@ -16,8 +16,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from benchmarks import batching, kv_usage, phase_intensity, splitwiser_hf
-    from benchmarks import splitwiser_vllm
+    from benchmarks import batching, kv_usage, phase_intensity, pressure
+    from benchmarks import splitwiser_hf, splitwiser_vllm
 
     suites = [
         ("phase_intensity", phase_intensity.rows),   # Figs 2-4
@@ -25,6 +25,7 @@ def main() -> None:
         ("splitwiser_hf", splitwiser_hf.rows),       # Figs 6-9
         ("splitwiser_vllm", splitwiser_vllm.rows),   # Figs 10-11
         ("batching", batching.rows),                 # Figs 12-13
+        ("pressure", pressure.rows),                 # beyond-paper: KV pressure
     ]
     all_rows = []
     print("name,us_per_call,derived")
@@ -68,6 +69,17 @@ def main() -> None:
             checks.append(("MPS arm beats the time-sliced (no-MPS) arm "
                            "(paper Fig 9: splitwiser alone shows no gain on A10)",
                            mps["reduction_vs_seq"] > nomps["reduction_vs_seq"]))
+        pr = by("pressure_oversubscribed")
+        if pr:
+            checks.append(("oversubscribed pool crashes the seed admission "
+                           "policy (OutOfPages) in every mode",
+                           all(r["seed_crash"] for r in pr)))
+            checks.append(("scheduler completes every request under KV "
+                           "pressure in every mode",
+                           all(r["n_done"] == r["n_requests"]
+                               and r["all_complete"] for r in pr)))
+            checks.append(("survival is preemption-driven (evictions occurred)",
+                           all(r["n_preemptions"] > 0 for r in pr)))
         f10 = by("fig10_elapsed")
         if f10:
             big = f10[-1]

@@ -134,6 +134,12 @@ class ServeConfig:
     max_seq_len: int = 1024
     prefill_chunk: int = 128     # chunked-prefill chunk size in mixed mode
     n_streams: int = 2           # parallel prompt-processing streams (paper's #processes)
+    # --- scheduler: admission + preemption under KV pressure ---
+    watermark: float = 0.01      # fraction of the page pool kept free at admission
+    decode_reserve: float = 0.5  # fraction of remaining max_new_tokens reserved
+                                 # as decode headroom when admitting a request
+    preempt_policy: str = "latest"  # latest: evict latest-arrival + recompute
+                                    # none:   seed behaviour (OutOfPages crash)
     sample_temperature: float = 0.0   # 0 => greedy
     sample_top_k: int = 0
     sample_top_p: float = 1.0

@@ -2,3 +2,4 @@
 # serving engine (scheduler + paged KV + mixed batching + metrics).
 from repro.core.kv_cache import PageAllocator, OutOfPages
 from repro.core.metrics import RequestMetrics, EngineMetrics
+from repro.core.scheduler import Scheduler

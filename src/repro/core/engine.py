@@ -38,6 +38,7 @@ from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
 from repro.core.metrics import EngineMetrics
 from repro.core.sampler import sample
+from repro.core.scheduler import Scheduler
 from repro.models import transformer as T
 
 
@@ -49,10 +50,18 @@ class Request:
     arrival: float = 0.0
     out_tokens: List[int] = field(default_factory=list)
 
+    @property
+    def prefill_tokens(self) -> List[int]:
+        """Tokens to (re-)prefill: the prompt plus anything generated
+        before a preemption, so a resumed request picks up exactly where
+        it stopped."""
+        return self.prompt + self.out_tokens
+
 
 @dataclass
 class _Stream:            # an in-progress chunked prefill (one "process")
     req: Request
+    tokens: List[int]     # req.prefill_tokens captured at admission
     pos: int = 0          # tokens prefilled so far
 
 
@@ -79,7 +88,6 @@ class Engine:
         self.now = time_fn
         self.metrics = EngineMetrics()
         self.alloc = PageAllocator(serve.n_pages, serve.page_size)
-        self.waiting: deque[Request] = deque()
         self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
         self.slots: List[Optional[_Slot]] = [None] * serve.max_batch
         self.block_tables = np.zeros((serve.max_batch, serve.max_pages_per_seq),
@@ -91,17 +99,16 @@ class Engine:
             self.cfg, serve.n_pages, serve.page_size, dtype=dtype)
         self._key = jax.random.PRNGKey(serve.seed)
         self._step_parity = 0
+        self.sched = Scheduler(self)
         self._build_jits()
+
+    @property
+    def waiting(self) -> "deque[Request]":
+        return self.sched.waiting
 
     # ------------------------------------------------------------- jits ----
     def _build_jits(self):
         cfg, serve = self.cfg, self.serve
-
-        def prefill_fn(params, tokens, lens):
-            last, kv = T.prefill(params, cfg, tokens)
-            # right-padded prompts: take logits at each row's last real token
-            hidden_last = last  # T.prefill returns last column; recompute below
-            return last, kv
 
         # full prefill returning per-row last-token logits
         def prefill_full(params, tokens, lens):
@@ -131,8 +138,12 @@ class Engine:
 
     # ------------------------------------------------------------ public ---
     def submit(self, req: Request):
+        if req.rid in self.metrics.requests:
+            raise ValueError(
+                f"duplicate request id {req.rid}: metrics/page ownership are "
+                "keyed by rid, so each submitted request needs a fresh one")
         req.arrival = req.arrival or self.now()
-        self.waiting.append(req)
+        self.sched.submit(req)
         m = self.metrics.req(req.rid)
         m.arrival = req.arrival
         m.n_prompt = len(req.prompt)
@@ -155,6 +166,7 @@ class Engine:
     # ------------------------------------------------------------- steps ---
     def step(self):
         mode = self.serve.mode
+        n_ev = len(self.metrics.sched_events)
         if mode == "sequential":
             kind = self._step_sequential()
         elif mode == "splitwiser":
@@ -163,45 +175,38 @@ class Engine:
             kind = self._step_fused()
         else:
             raise ValueError(mode)
+        if kind == "idle" and any(
+                e["event"] == "preempt"
+                for e in self.metrics.sched_events[n_ev:]):
+            kind = "preempt"    # nothing dispatched, but evictions happened
         self.metrics.n_steps += 1
         self.metrics.step_kinds.append(kind)
         self.metrics.kv_usage_trace.append(self.alloc.usage())
 
     # --- sequential: full-prompt prefill OR decode per step -----------------
     def _step_sequential(self) -> str:
-        batch = self._take_prefillable()
+        batch = self.sched.take_prefillable()
         if batch:
             self._do_full_prefill(batch)
             return "prefill"
-        if any(self.slots):
-            self._do_decode()
+        if any(self.slots) and self._do_decode():
             return "decode"
         return "idle"
-
-    def _take_prefillable(self) -> List[Request]:
-        out = []
-        free_slots = sum(s is None for s in self.slots)
-        budget = self.alloc.n_free
-        while self.waiting and len(out) < free_slots:
-            r = self.waiting[0]
-            need = self.alloc.pages_needed(len(r.prompt) + 1)
-            if need > budget:
-                break
-            budget -= need
-            out.append(self.waiting.popleft())
-        return out
 
     def _do_full_prefill(self, reqs: List[Request]):
         ps = self.serve.page_size
         t0 = self.now()
-        S_pad = max(-(-max(len(r.prompt) for r in reqs) // ps) * ps, ps)
+        S_pad = max(-(-max(len(r.prefill_tokens) for r in reqs) // ps) * ps, ps)
         Bp = len(reqs)
         tokens = np.zeros((Bp, S_pad), np.int32)
         lens = np.zeros((Bp,), np.int32)
         for i, r in enumerate(reqs):
-            tokens[i, : len(r.prompt)] = r.prompt
-            lens[i] = len(r.prompt)
-            self.metrics.req(r.rid).t_prefill_start = t0
+            toks = r.prefill_tokens
+            tokens[i, : len(toks)] = toks
+            lens[i] = len(toks)
+            m = self.metrics.req(r.rid)
+            if m.t_prefill_start is None:
+                m.t_prefill_start = t0
         logits, (k, v) = self._prefill(self.params, jnp.asarray(tokens),
                                        jnp.asarray(lens))
         # commit contiguous KV into allocated pages
@@ -220,11 +225,14 @@ class Engine:
             self._emit_first_token(r, int(toks[i]), int(lens[i]), t1)
 
     def _emit_first_token(self, req: Request, tok: int, seq_len: int, t):
+        """First token after a (re-)prefill; a resumed request keeps its
+        original TTFT."""
         m = self.metrics.req(req.rid)
-        m.t_first_token = t
+        if m.t_first_token is None:
+            m.t_first_token = t
         m.token_times.append(t)
-        m.n_generated = 1
         req.out_tokens.append(tok)
+        m.n_generated = len(req.out_tokens)
         if self._finished(req):
             self._finish(req, t)
             return
@@ -246,93 +254,97 @@ class Engine:
         m.n_generated = len(req.out_tokens)
         self.alloc.free(req.rid)
 
-    def _do_decode(self):
-        B = self.serve.max_batch
-        tokens = np.zeros((B,), np.int32)
-        lens = np.zeros((B,), np.int32)
-        active = np.zeros((B,), bool)
-        for i, s in enumerate(self.slots):
+    def _reserve_decode_pages(self):
+        """Grow every active slot's page table for its next token,
+        preempting younger requests under pressure.  A slot that cannot
+        be served even after evicting every younger victim (older
+        requests hold the pool) preempts itself.  With
+        ``preempt_policy="none"`` the raw `extend_to` may raise
+        OutOfPages — the seed crash, kept for comparison runs."""
+        for i in range(len(self.slots)):
+            s = self.slots[i]
             if s is None:
                 continue
-            # grow page table if the next token starts a new page
+            if self.serve.preempt_policy != "none" and \
+                    not self.sched.ensure_pages(s.req, s.seq_len + 1):
+                self.sched.preempt("slot", i, reason="self")
+                continue
             new = self.alloc.extend_to(s.req.rid, s.seq_len + 1)
             if new:
                 bt = self.alloc.owned(s.req.rid)
                 self.block_tables[i, : len(bt)] = bt
-            tokens[i] = s.next_token
-            lens[i] = s.seq_len
-            active[i] = True
+
+    def _do_decode(self) -> bool:
+        self._reserve_decode_pages()
+        tokens, lens, active = self._decode_inputs()
+        if not active.any():        # every slot was preempted
+            return False
         logits, (self.k_pages, self.v_pages) = self._decode(
             self.params, jnp.asarray(tokens), self.k_pages, self.v_pages,
             jnp.asarray(self.block_tables), jnp.asarray(lens),
             jnp.asarray(active))
-        toks = self._sample(logits)
-        t = self.now()
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            tok = int(toks[i])
-            s.req.out_tokens.append(tok)
-            s.seq_len += 1
-            m = self.metrics.req(s.req.rid)
-            m.token_times.append(t)
-            m.n_generated = len(s.req.out_tokens)
-            if self._finished(s.req):
-                self._finish(s.req, t)
-                self.slots[i] = None
-            else:
-                s.next_token = tok
+        self._advance_decode(logits, active, self.now())
+        return True
 
     # --- splitwiser modes ----------------------------------------------------
     def _refill_streams(self):
-        for i in range(len(self.streams)):
-            if self.streams[i] is None and self.waiting:
-                r = self.waiting[0]
-                need = self.alloc.pages_needed(len(r.prompt) + 1)
-                if need > self.alloc.n_free:
-                    break
-                self.waiting.popleft()
-                self.streams[i] = _Stream(req=r)
-                self.metrics.req(r.rid).t_prefill_start = self.now()
+        for r in self.sched.admit_streams():
+            i = self.streams.index(None)
+            self.streams[i] = _Stream(req=r, tokens=r.prefill_tokens)
+            m = self.metrics.req(r.rid)
+            if m.t_prefill_start is None:
+                m.t_prefill_start = self.now()
 
     def _compose_prefill(self):
         """Build the prefill half of a mixed batch from the streams.
 
         A stream's final chunk is only scheduled when a decode slot is
-        available for the request it completes (backpressure).
+        available for the request it completes (backpressure); a stream
+        whose page extension cannot be satisfied this step — even after
+        the scheduler evicts younger victims — simply skips its chunk
+        and retries once pages free up.  Streams already composed this
+        step are protected from eviction (their chunk is about to write
+        into their pages).
         """
         P, C = self.serve.n_streams, self.serve.prefill_chunk
         p_tokens = np.zeros((P, C), np.int32)
         p_start = np.zeros((P,), np.int32)
         p_lens = np.zeros((P,), np.int32)
         chunks = []
+        protect = set()
         free_slots = sum(s is None for s in self.slots)
         for i, st in enumerate(self.streams):
             if st is None:
                 continue
-            n = min(C, len(st.req.prompt) - st.pos)
+            n = min(C, len(st.tokens) - st.pos)
             if n <= 0:
                 continue
-            if st.pos + n >= len(st.req.prompt):     # completing chunk
+            if st.pos + n >= len(st.tokens):         # completing chunk
                 if free_slots <= 0:
                     continue
+            if self.serve.preempt_policy != "none" and \
+                    not self.sched.ensure_pages(st.req, st.pos + n + 1,
+                                                protect=protect):
+                continue
+            if st.pos + n >= len(st.tokens):
                 free_slots -= 1
             self.alloc.extend_to(st.req.rid, st.pos + n + 1)
             bt = self.alloc.owned(st.req.rid)
             self.stream_tables[i, :] = 0
             self.stream_tables[i, : len(bt)] = bt
-            p_tokens[i, :n] = st.req.prompt[st.pos : st.pos + n]
+            p_tokens[i, :n] = st.tokens[st.pos : st.pos + n]
             p_start[i] = st.pos
             p_lens[i] = n
+            protect.add(st.req.rid)
             chunks.append((i, st, n))
         return p_tokens, p_start, p_lens, chunks
 
     def _advance_streams(self, chunks, p_logits, t):
         for i, st, n in chunks:
             st.pos += n
-            if st.pos >= len(st.req.prompt):
+            if st.pos >= len(st.tokens):
                 tok = int(self._sample(p_logits[i : i + 1])[0])
-                self._emit_first_token(st.req, tok, len(st.req.prompt), t)
+                self._emit_first_token(st.req, tok, len(st.tokens), t)
                 self.streams[i] = None
 
     def _decode_inputs(self):
@@ -343,10 +355,6 @@ class Engine:
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
-            new = self.alloc.extend_to(s.req.rid, s.seq_len + 1)
-            if new:
-                bt = self.alloc.owned(s.req.rid)
-                self.block_tables[i, : len(bt)] = bt
             tokens[i] = s.next_token
             lens[i] = s.seq_len
             active[i] = True
@@ -355,6 +363,11 @@ class Engine:
     def _step_fused(self) -> str:
         """splitwiser_mps: ONE program runs both phases (the contribution)."""
         self._refill_streams()
+        # reserve decode pages BEFORE composing prefill: compose-time
+        # eviction of an already-extended slot is safe (it just drops out
+        # of the decode half), the reverse would dispatch a chunk into a
+        # preempted stream's freed pages.
+        self._reserve_decode_pages()
         p_tokens, p_start, p_lens, chunks = self._compose_prefill()
         d_tokens, d_lens, d_active = self._decode_inputs()
         if not chunks and not d_active.any():
@@ -379,7 +392,7 @@ class Engine:
     def _step_timesliced(self) -> str:
         """splitwiser (no MPS): phases alternate as separate programs."""
         self._refill_streams()
-        has_chunks = any(s is not None and s.pos < len(s.req.prompt)
+        has_chunks = any(s is not None and s.pos < len(s.tokens)
                          for s in self.streams)
         has_decode = any(self.slots)
         do_prefill = has_chunks and (self._step_parity == 0 or not has_decode)
@@ -387,23 +400,25 @@ class Engine:
         if do_prefill:
             # phase-exclusive program: prefill chunks only (B=0 decode part)
             p_tokens, p_start, p_lens, chunks = self._compose_prefill()
-            Pmax = self.serve.max_pages_per_seq
-            mb = dict(
-                p_tokens=jnp.asarray(p_tokens),
-                p_table=jnp.asarray(self.stream_tables),
-                p_start=jnp.asarray(p_start),
-                p_lens=jnp.asarray(p_lens),
-                d_tokens=jnp.zeros((0,), jnp.int32),
-                d_table=jnp.zeros((0, Pmax), jnp.int32),
-                d_lens=jnp.zeros((0,), jnp.int32),
-                d_active=jnp.zeros((0,), bool),
-            )
-            p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
-                self.params, mb, self.k_pages, self.v_pages)
-            self._advance_streams(chunks, p_logits, self.now())
-            return "prefill_chunk"
-        if has_decode:
-            self._do_decode()
+            if chunks:
+                Pmax = self.serve.max_pages_per_seq
+                mb = dict(
+                    p_tokens=jnp.asarray(p_tokens),
+                    p_table=jnp.asarray(self.stream_tables),
+                    p_start=jnp.asarray(p_start),
+                    p_lens=jnp.asarray(p_lens),
+                    d_tokens=jnp.zeros((0,), jnp.int32),
+                    d_table=jnp.zeros((0, Pmax), jnp.int32),
+                    d_lens=jnp.zeros((0,), jnp.int32),
+                    d_active=jnp.zeros((0,), bool),
+                )
+                p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
+                    self.params, mb, self.k_pages, self.v_pages)
+                self._advance_streams(chunks, p_logits, self.now())
+                return "prefill_chunk"
+            # slot backpressure / page pressure filtered out every chunk:
+            # don't dispatch an empty program, fall through to decode
+        if has_decode and self._do_decode():
             return "decode"
         return "idle"
 

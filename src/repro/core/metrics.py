@@ -17,6 +17,7 @@ class RequestMetrics:
     token_times: List[float] = field(default_factory=list)
     n_prompt: int = 0
     n_generated: int = 0
+    n_preempted: int = 0         # times this request was evicted + requeued
 
     @property
     def ttft(self) -> Optional[float]:
@@ -39,6 +40,8 @@ class EngineMetrics:
     requests: Dict[int, RequestMetrics] = field(default_factory=dict)
     kv_usage_trace: List[float] = field(default_factory=list)
     step_kinds: List[str] = field(default_factory=list)
+    # scheduler-event trace: dicts {"t", "event": "admit"|"preempt", "rid", ...}
+    sched_events: List[dict] = field(default_factory=list)
     t_start: float = 0.0
     t_end: float = 0.0
     n_steps: int = 0
@@ -67,6 +70,9 @@ class EngineMetrics:
             "tbt": agg([r.tbt for r in done]),
             "e2e": agg([r.e2e for r in done]),
             "n_steps": self.n_steps,
+            "n_preemptions": sum(r.n_preempted for r in self.requests.values()),
+            "n_preempted_requests": sum(
+                1 for r in self.requests.values() if r.n_preempted),
             "kv_usage_peak": max(self.kv_usage_trace, default=0.0),
             "kv_usage_mean": (sum(self.kv_usage_trace) / len(self.kv_usage_trace))
                              if self.kv_usage_trace else 0.0,

@@ -1,0 +1,211 @@
+"""Admission control and preemption for the serving engine.
+
+The paper's premise is serving under *constrained resources*: its
+Fig. 5/14/15 analysis shows KV-cache usage climbing toward exhaustion as
+batch size grows.  The seed engine simply crashed there — admission
+reserved pages for ``len(prompt)+1`` tokens while decode kept allocating
+a page every ``page_size`` generated tokens, so ``PageAllocator.extend_to``
+eventually raised :class:`OutOfPages` from the decode path.
+
+This module makes page pressure a first-class scheduling concern (the
+subsystem vLLM and SARATHI-style single-GPU schedulers treat as such):
+
+Admission (watermark-based, ``max_new_tokens``-aware)
+    A waiting request is admitted only when the pool keeps a
+    ``serve.watermark`` fraction free *after* reserving pages for its
+    prompt plus ``serve.decode_reserve`` of its remaining generation
+    budget.  Head-of-line progress guarantee: when nothing holds pages,
+    the head request is admitted whenever its bare prompt fits — and if
+    even that exceeds the pool, :class:`OutOfPages` is raised eagerly
+    with a sizing message instead of mid-decode.
+
+Preemption by recomputation (``serve.preempt_policy == "latest"``)
+    When a page extension would exhaust the pool, the running request
+    (decode slot or prefill stream) with the *latest* arrival among
+    those younger than the needy one is evicted: its pages are freed and
+    the request is requeued at the front of the waiting queue.  On
+    re-admission it prefills ``prompt + out_tokens`` so greedy decoding
+    resumes exactly where it stopped.  Arrival order gives a total
+    priority order — the oldest running request always makes progress —
+    so any workload whose requests individually fit the pool terminates.
+    ``preempt_policy == "none"`` restores the seed crash-on-exhaustion
+    behaviour (used by benchmarks to show the graceful-degradation
+    delta).
+
+Every decision is recorded in ``EngineMetrics.sched_events`` and
+aggregated by ``EngineMetrics.summary()`` so benchmarks can plot
+graceful-degradation curves.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.core.kv_cache import OutOfPages
+
+
+class Scheduler:
+    """Owns every admission and page-pressure decision for one Engine.
+
+    The engine keeps the mechanism (batch assembly, jit dispatch, block
+    tables); the scheduler keeps the policy.  It reads/writes the
+    engine's ``slots`` / ``streams`` lists directly when evicting.
+    """
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.serve = engine.serve
+        if self.serve.preempt_policy not in ("latest", "none"):
+            raise ValueError(
+                f"unknown preempt_policy {self.serve.preempt_policy!r}; "
+                "expected 'latest' or 'none'")
+        self.alloc = engine.alloc
+        self.metrics = engine.metrics
+        self.waiting: Deque = deque()
+
+    # ------------------------------------------------------------ queue ----
+    def submit(self, req) -> None:
+        self.waiting.append(req)
+
+    def requeue(self, req) -> None:
+        """Put a preempted request at the *front* so it resumes first."""
+        self.waiting.appendleft(req)
+
+    # -------------------------------------------------------- admission ----
+    @property
+    def watermark_pages(self) -> int:
+        return int(math.ceil(self.serve.watermark * (self.alloc.n_pages - 1)))
+
+    def admission_pages(self, req) -> int:
+        """Pages to budget for admitting `req`: prompt (plus any tokens
+        generated before a preemption) + 1, plus `decode_reserve` of the
+        remaining generation as decode headroom."""
+        remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
+        headroom = int(self.serve.decode_reserve * (remaining - 1))
+        n_prefill = len(req.prompt) + len(req.out_tokens)
+        return self.alloc.pages_needed(n_prefill + 1 + headroom)
+
+    def _bare_pages(self, req) -> int:
+        """Minimum pages the request needs to start; raises if the pool
+        or a block-table row can never hold it (clear sizing error
+        instead of a decode-path crash)."""
+        n_prefill = len(req.prompt) + len(req.out_tokens)
+        need = self.alloc.pages_needed(n_prefill + 1)
+        if need > self.alloc.n_pages - 1:
+            raise OutOfPages(
+                f"request {req.rid} needs {need} pages for "
+                f"{n_prefill} tokens but the pool only has "
+                f"{self.alloc.n_pages - 1}; raise n_pages/page_size")
+        if need > self.serve.max_pages_per_seq:
+            raise OutOfPages(
+                f"request {req.rid} needs {need} pages for "
+                f"{n_prefill} tokens but block tables hold "
+                f"{self.serve.max_pages_per_seq}; raise max_pages_per_seq")
+        return need
+
+    def _admit_head(self, budget: int, first: bool) -> Tuple[Optional[object], int]:
+        """Pop the head request if it fits `budget`.  Progress override:
+        when the pool is completely idle and this would be the first
+        admission, the head is admitted on a bare-prompt fit even if the
+        watermark/headroom budget says no (otherwise a big request could
+        wait forever behind its own reservation)."""
+        r = self.waiting[0]
+        bare = self._bare_pages(r)      # raises when it can never fit
+        need = self.admission_pages(r)
+        if need > budget:
+            if not (first and self.alloc.n_allocated == 0):
+                return None, budget
+            need = bare
+        self.waiting.popleft()
+        self._event("admit", r.rid, pages=need,
+                    resumed=bool(r.out_tokens))
+        return r, budget - need
+
+    def _admit_up_to(self, limit: int) -> List:
+        out: List = []
+        budget = self.alloc.n_free - self.watermark_pages
+        while self.waiting and len(out) < limit:
+            r, budget = self._admit_head(budget, first=not out)
+            if r is None:
+                break
+            out.append(r)
+        return out
+
+    def take_prefillable(self) -> List:
+        """Sequential-mode admission: head-of-queue requests that fit the
+        free decode slots and the watermarked page budget."""
+        return self._admit_up_to(sum(s is None for s in self.eng.slots))
+
+    def admit_streams(self) -> List:
+        """Splitwiser-mode admission: requests to place on free prefill
+        streams under the same watermarked budget."""
+        return self._admit_up_to(sum(s is None for s in self.eng.streams))
+
+    # -------------------------------------------------------- preemption ---
+    def ensure_pages(self, req, n_tokens: int, protect=()) -> bool:
+        """Make the allocator able to extend `req` to `n_tokens`,
+        evicting younger victims under the "latest" policy.
+
+        Returns False when only older requests (or `protect`-ed ones)
+        hold the remaining pages — the caller yields (self-preempts or
+        skips its chunk).  Raises OutOfPages when the sequence alone can
+        never fit the pool or its block-table row.
+        """
+        if self.alloc.pages_needed(n_tokens) > self.serve.max_pages_per_seq:
+            raise OutOfPages(
+                f"request {req.rid} at {n_tokens} tokens needs "
+                f"{self.alloc.pages_needed(n_tokens)} pages but block tables "
+                f"hold {self.serve.max_pages_per_seq}; raise max_pages_per_seq")
+        need = self.alloc.pages_needed(n_tokens) - len(self.alloc.owned(req.rid))
+        if need <= 0 or self.alloc.can_alloc(need):
+            return True
+        if self.serve.preempt_policy == "latest":
+            while not self.alloc.can_alloc(need):
+                victim = self._pick_victim(req, protect)
+                if victim is None:
+                    break
+                self.preempt(*victim, reason=f"pressure rid={req.rid}")
+            if self.alloc.can_alloc(need):
+                return True
+        if self.alloc.n_allocated == len(self.alloc.owned(req.rid)):
+            raise OutOfPages(
+                f"request {req.rid} needs {self.alloc.pages_needed(n_tokens)} "
+                f"pages at {n_tokens} tokens but the pool only has "
+                f"{self.alloc.n_pages - 1}; raise n_pages/page_size")
+        return False
+
+    def _pick_victim(self, needy, protect=()) -> Optional[Tuple[str, int]]:
+        """Latest-arrival running request strictly younger than `needy`."""
+        best_key, best = None, None
+        for kind, cont in (("slot", self.eng.slots),
+                           ("stream", self.eng.streams)):
+            for i, s in enumerate(cont):
+                if s is None or s.req.rid in protect:
+                    continue
+                if not self.alloc.owned(s.req.rid):
+                    continue     # evicting a page-less victim frees nothing
+                key = (s.req.arrival, s.req.rid)
+                if key <= (needy.arrival, needy.rid):
+                    continue
+                if best_key is None or key > best_key:
+                    best_key, best = key, (kind, i)
+        return best
+
+    def preempt(self, kind: str, index: int, reason: str = "") -> None:
+        """Evict a running request: free its pages and requeue it with
+        its generated tokens folded into the next prefill (recomputation
+        — paper §II-G's KV "mapping" is simply rebuilt)."""
+        cont = self.eng.slots if kind == "slot" else self.eng.streams
+        victim = cont[index]
+        cont[index] = None
+        r = victim.req
+        freed = self.alloc.free(r.rid)
+        self.requeue(r)
+        self.metrics.req(r.rid).n_preempted += 1
+        self._event("preempt", r.rid, kind=kind, pages=freed, reason=reason)
+
+    # ------------------------------------------------------------ trace ----
+    def _event(self, ev: str, rid: int, **detail) -> None:
+        self.metrics.sched_events.append(
+            {"t": self.eng.now(), "event": ev, "rid": rid, **detail})

@@ -3,6 +3,9 @@ scheduler conservation, sampler, SSM chunk-invariance, quantized moments."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.kv_cache import OutOfPages, PageAllocator
