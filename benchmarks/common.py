@@ -6,6 +6,7 @@ import numpy as np
 
 from repro.configs import ServeConfig, get_config
 from repro.core.engine import Engine, Request
+from repro.core.sampler import SamplingParams
 from repro.data import report_tokens
 from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
 
@@ -25,9 +26,16 @@ def model_and_params(arch="opt-125m"):
     return _PARAMS_CACHE[arch]
 
 
-def make_requests(n, input_tokens, output_tokens, vocab, seed=0):
+def make_requests(n, input_tokens, output_tokens, vocab, seed=0, *,
+                  sampling=None, arrivals=None):
+    """Synthetic requests; `sampling` overrides the default greedy
+    SamplingParams, `arrivals` (seconds offsets) marks them for open-loop
+    replay."""
     prompts = report_tokens(n, input_tokens, vocab, seed)
-    return [Request(rid=i, prompt=list(p), max_new_tokens=output_tokens)
+    sp = sampling if sampling is not None else \
+        SamplingParams(max_new_tokens=output_tokens)
+    return [Request(rid=i, prompt=list(p), sampling=sp,
+                    arrival=None if arrivals is None else float(arrivals[i]))
             for i, p in enumerate(prompts)]
 
 

@@ -1,0 +1,63 @@
+"""Open-loop serving: Poisson arrivals against the virtual clock.
+
+The paper frames Splitwiser as a serving system fed by queues of
+requests (§V), but every closed-loop figure replays a batch all at once.
+This scenario feeds requests in at Poisson arrival times
+(``Engine.run(..., open_loop=True)``) and reports TTFT/TBT measured from
+the streamed ``RequestOutput``s — the latency a client would actually
+see at a given offered load, per engine mode.
+
+Arrival times live on the engine's virtual clock (idle gaps are
+fast-forwarded), so the scenario is deterministic in shape and runs at
+full speed regardless of the offered rate.
+"""
+import numpy as np
+
+from benchmarks.common import make_requests, model_and_params, serve_cfg
+from repro.core.engine import Engine
+
+N_REQ, INPUT, OUTPUT = 10, 48, 12
+RATES = (5.0, 50.0)          # offered load, requests per virtual second
+MODES = ["sequential", "splitwiser_mps"]
+
+
+def _agg(vals):
+    vals = [v for v in vals if v is not None]
+    if not vals:
+        return None, None
+    return (round(float(np.mean(vals)), 4),
+            round(float(np.median(vals)), 4))
+
+
+def rows():
+    model, params = model_and_params("opt-125m")
+    V = model.cfg.vocab_size
+    out = []
+    for mode in MODES:
+        sc = serve_cfg(mode, n_requests=N_REQ, input_tokens=INPUT,
+                       output_tokens=OUTPUT, max_batch=8)
+        Engine(model, params, sc).run(       # compile outside the timed runs
+            make_requests(2, INPUT, 2, V), max_steps=200)
+        for rate in RATES:
+            rng = np.random.default_rng(0)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate, size=N_REQ))
+            eng = Engine(model, params, sc)
+            reqs = make_requests(N_REQ, INPUT, OUTPUT, V, arrivals=arrivals)
+            events = list(eng.stream(reqs, open_loop=True, max_steps=100_000))
+            outputs = eng.poll()
+            by_rid = {o.rid: o for o in outputs}
+            firsts = {e.rid: e.t for e in events if e.first}
+            ttft_mean, ttft_p50 = _agg([o.ttft for o in outputs])
+            tbt_mean, _ = _agg([o.tbt for o in outputs])
+            out.append(dict(
+                bench="open_loop_poisson", x=f"{mode}@{rate:g}rps",
+                n_requests=N_REQ, n_done=len(outputs),
+                all_finished_by_length=all(
+                    o.finish_reason == "length" for o in outputs),
+                respects_arrivals=all(
+                    firsts[o.rid] >= o.arrival for o in outputs),
+                arrival_span_s=round(float(arrivals[-1]), 3),
+                ttft_mean=ttft_mean, ttft_p50=ttft_p50, tbt_mean=tbt_mean,
+                n_preempted=sum(by_rid[r].n_preempted for r in by_rid),
+            ))
+    return out

@@ -16,8 +16,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from benchmarks import batching, kv_usage, phase_intensity, pressure
-    from benchmarks import splitwiser_hf, splitwiser_vllm
+    from benchmarks import batching, kv_usage, open_loop, phase_intensity
+    from benchmarks import pressure, splitwiser_hf, splitwiser_vllm
 
     suites = [
         ("phase_intensity", phase_intensity.rows),   # Figs 2-4
@@ -26,6 +26,7 @@ def main() -> None:
         ("splitwiser_vllm", splitwiser_vllm.rows),   # Figs 10-11
         ("batching", batching.rows),                 # Figs 12-13
         ("pressure", pressure.rows),                 # beyond-paper: KV pressure
+        ("open_loop", open_loop.rows),               # beyond-paper: Poisson arrivals
     ]
     all_rows = []
     print("name,us_per_call,derived")
@@ -44,7 +45,9 @@ def main() -> None:
     # ---- validation vs the paper's claims (directional) ----
     if not args.only:
         checks = []
-        by = lambda b: [r for r in all_rows if r["bench"] == b]
+
+        def by(b):
+            return [r for r in all_rows if r["bench"] == b]
         pf = by("fig2_prefill_intensity")
         dc = by("fig3_decode_intensity")
         checks.append(("prefill arithmetic intensity grows with input tokens",
@@ -80,6 +83,13 @@ def main() -> None:
                                and r["all_complete"] for r in pr)))
             checks.append(("survival is preemption-driven (evictions occurred)",
                            all(r["n_preemptions"] > 0 for r in pr)))
+        ol = by("open_loop_poisson")
+        if ol:
+            checks.append(("open-loop Poisson run finishes every request",
+                           all(r["n_done"] == r["n_requests"] for r in ol)))
+            checks.append(("every first token lands at/after its request's "
+                           "arrival (timed admission)",
+                           all(r["respects_arrivals"] for r in ol)))
         f10 = by("fig10_elapsed")
         if f10:
             big = f10[-1]

@@ -13,7 +13,6 @@ Fig 11: per-batch latency trade-off (time per engine step under MP).
 """
 import time
 
-import jax
 import numpy as np
 
 from benchmarks.common import (make_requests, model_and_params, serve_cfg)

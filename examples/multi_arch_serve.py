@@ -2,18 +2,15 @@
 dense (qwen3), MoE (olmoe), sliding-window+softcap (gemma2) — all reduced
 configs, all three Splitwiser arms.
 
-    PYTHONPATH=src python examples/multi_arch_serve.py
+    pip install -e .            # or: export PYTHONPATH=src
+    python examples/multi_arch_serve.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
 import numpy as np
 
 from repro.configs import ServeConfig, get_config
 from repro.core.engine import Engine, Request
+from repro.core.sampler import SamplingParams
 from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
 
 
@@ -30,7 +27,8 @@ def main():
         eng = Engine(model, params, serve)
         reqs = [Request(rid=i,
                         prompt=list(rng.randint(2, cfg.vocab_size, 24)),
-                        max_new_tokens=8) for i in range(6)]
+                        sampling=SamplingParams(max_new_tokens=8))
+                for i in range(6)]
         s = eng.run(reqs).summary()
         print(f"{arch:14s} [{cfg.family:5s}] done={s['n_done']} "
               f"steps={s['n_steps']} tput={s['throughput_tok_s']:7.1f} tok/s "

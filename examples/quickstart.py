@@ -1,21 +1,41 @@
 """Quickstart: serve a small LM with the Splitwiser engine.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .            # or: export PYTHONPATH=src
+    python examples/quickstart.py
 
-Builds the paper's model (opt-125m dims, reduced for CPU), submits a batch
-of synthetic radiology-report prompts (the paper's MIMIC-III stand-in),
-and compares the three execution arms from the paper: sequential,
-splitwiser (time-sliced phases), splitwiser+MPS (fused mixed batching).
+Builds the paper's model (opt-125m dims, reduced for CPU) and walks the
+vLLM-shaped API surface:
+
+  1. per-request ``SamplingParams`` — a greedy request, a temperature-
+     sampled one, and one that stops on a stop token, all in one batch;
+  2. streaming ``TokenEvent``s from ``Engine.stream()`` and final
+     ``RequestOutput``s from ``Engine.poll()``;
+  3. the three execution arms from the paper (sequential, splitwiser,
+     splitwiser+MPS) producing identical greedy tokens.
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
 
 from repro.configs import ServeConfig, get_config
 from repro.core.engine import Engine, Request
+from repro.core.sampler import SamplingParams
 from repro.data import report_tokens
 from repro.models.registry import CACHE_KIND, FAMILY_MODULE, Model
+
+
+def serve_config(mode):
+    return ServeConfig(mode=mode, max_batch=4, page_size=16, n_pages=256,
+                       max_pages_per_seq=8, prefill_chunk=32, n_streams=2)
+
+
+def make_requests(prompts, stop_token):
+    """One batch, three different per-request sampling policies."""
+    greedy = SamplingParams(max_new_tokens=10)
+    sampled = SamplingParams(max_new_tokens=10, temperature=0.8, top_k=40,
+                             seed=7)
+    short = SamplingParams(max_new_tokens=10, stop_token_ids=(stop_token,))
+    policies = [greedy, sampled, short]
+    return [Request(rid=i, prompt=list(p), sampling=policies[i % 3])
+            for i, p in enumerate(prompts)]
 
 
 def main():
@@ -23,21 +43,45 @@ def main():
     model = Model("opt-125m", cfg, FAMILY_MODULE[cfg.family],
                   CACHE_KIND[cfg.family])
     params = model.init(jax.random.PRNGKey(0))
-    prompts = report_tokens(8, 64, cfg.vocab_size)
+    prompts = report_tokens(6, 48, cfg.vocab_size)
 
+    # learn a token the model actually emits for prompt 2, so the
+    # stop-token policy demonstrably fires (finish_reason="stop")
+    probe = Engine(model, params, serve_config("sequential"))
+    pr = Request(rid=0, prompt=list(prompts[2]),
+                 sampling=SamplingParams(max_new_tokens=2))
+    probe.run([pr])
+    stop_token = pr.out_tokens[-1]
+
+    # --- streaming: watch tokens arrive (splitwiser_mps arm) -------------
+    eng = Engine(model, params, serve_config("splitwiser_mps"))
+    n_events = 0
+    for ev in eng.stream(make_requests(prompts, stop_token)):
+        n_events += 1
+        if ev.first or ev.finish_reason:
+            tag = "first" if ev.first else f"done({ev.finish_reason})"
+            print(f"  [stream] rid={ev.rid} token#{ev.index}={ev.token:4d} {tag}")
+    outputs = {o.rid: o for o in eng.poll()}
+    print(f"streamed {n_events} TokenEvents; "
+          f"finish reasons: { {r: o.finish_reason for r, o in sorted(outputs.items())} }")
+    assert outputs[2].finish_reason == "stop", "stop-token demo must fire"
+    print(f"rid=0 output: {outputs[0].tokens}  "
+          f"TTFT={outputs[0].ttft:.3f}s TBT={(outputs[0].tbt or 0):.4f}s\n")
+
+    # --- the paper's three arms on the same mixed workload ---------------
+    per_mode = {}
     for mode in ["sequential", "splitwiser", "splitwiser_mps"]:
-        serve = ServeConfig(mode=mode, max_batch=4, page_size=16, n_pages=256,
-                            max_pages_per_seq=8, prefill_chunk=32, n_streams=2)
-        eng = Engine(model, params, serve)
-        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=12)
-                for i, p in enumerate(prompts)]
-        m = eng.run(reqs)
-        s = m.summary()
+        eng = Engine(model, params, serve_config(mode))
+        reqs = make_requests(prompts, stop_token)
+        s = eng.run(reqs).summary()
+        per_mode[mode] = [r.out_tokens for r in reqs]
         print(f"{mode:16s} steps={s['n_steps']:4d} "
               f"wall={s['wall_s']:.2f}s tput={s['throughput_tok_s']:7.1f} tok/s "
               f"TTFT={s['ttft']['mean']:.3f}s KVpeak={s['kv_usage_peak']:.0%}")
-    print("\nall three arms produce identical greedy tokens "
-          "(verified in tests/test_system.py)")
+    assert per_mode["sequential"] == per_mode["splitwiser"] == \
+        per_mode["splitwiser_mps"], "modes must agree token-for-token"
+    print("\nall three arms produce identical tokens per request "
+          "(seeded sampling is batch- and mode-independent)")
 
 
 if __name__ == "__main__":

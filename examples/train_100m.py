@@ -1,7 +1,8 @@
 """End-to-end training driver: train a ~100M-param qwen3-family model for a
 few hundred steps on the synthetic pipeline, with checkpointing enabled.
 
-    PYTHONPATH=src python examples/train_100m.py [--steps 300] [--tiny]
+    pip install -e .            # or: export PYTHONPATH=src
+    python examples/train_100m.py [--steps 300] [--tiny]
 
 --tiny uses the reduced config (CI/CPU-friendly); the default builds a
 ~100M-parameter variant (scaled-down qwen3: 12L x 512d) that trains on CPU
@@ -10,13 +11,8 @@ at a few steps/min. On a TPU mesh the same Trainer runs the full configs
 """
 import argparse
 import dataclasses
-import os
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import jax
 
 from repro.configs import TrainConfig, get_config
 from repro.data import make_train_data_fn

@@ -21,7 +21,6 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -7,7 +7,7 @@ package instantiate it with the exact published numbers.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -122,10 +122,21 @@ class ModelConfig:
         return dataclasses.replace(self, name=self.name + "-reduced", **kw)
 
 
+# Engine execution modes (see core/engine.py for what each arm means);
+# "mp2" from the paper is not an engine mode — benchmarks build it from two
+# "sequential" replicas (benchmarks/splitwiser_vllm.py).
+SERVE_MODES = ("sequential", "splitwiser", "splitwiser_mps")
+
+
 @dataclass(frozen=True)
 class ServeConfig:
-    """Serving-engine (Splitwiser) configuration."""
-    mode: str = "splitwiser"     # sequential | splitwiser | splitwiser_mps | splitwise | mp2
+    """Serving-engine (Splitwiser) configuration.
+
+    Sampling knobs live on each request (``SamplingParams`` in
+    ``core/sampler.py``), not here: one engine serves heterogeneous
+    workloads.
+    """
+    mode: str = "splitwiser"     # one of SERVE_MODES
     max_batch: int = 64          # max concurrent decode sequences
     token_budget: int = 256      # token slots per mixed step (prefill chunk + decode)
     page_size: int = 16          # tokens per KV page
@@ -140,10 +151,12 @@ class ServeConfig:
                                  # as decode headroom when admitting a request
     preempt_policy: str = "latest"  # latest: evict latest-arrival + recompute
                                     # none:   seed behaviour (OutOfPages crash)
-    sample_temperature: float = 0.0   # 0 => greedy
-    sample_top_k: int = 0
-    sample_top_p: float = 1.0
-    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in SERVE_MODES:
+            raise ValueError(
+                f"unknown serve mode {self.mode!r}; supported modes: "
+                f"{', '.join(SERVE_MODES)}")
 
 
 @dataclass(frozen=True)

@@ -2,7 +2,7 @@
 
 Used by the paper-reproduction benchmarks (Figs. 6-11). Dimensionally
 matched stand-in inside our stack (RoPE instead of learned positions;
-documented in DESIGN.md — position-encoding flavor is irrelevant to the
+position-encoding flavor is irrelevant to the
 phase-splitting results being reproduced).
 """
 from repro.configs.base import ModelConfig

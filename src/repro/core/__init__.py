@@ -1,5 +1,14 @@
 # The paper's primary contribution: the Splitwiser phase-splitting
-# serving engine (scheduler + paged KV + mixed batching + metrics).
-from repro.core.kv_cache import PageAllocator, OutOfPages
-from repro.core.metrics import RequestMetrics, EngineMetrics
+# serving engine (scheduler + paged KV + mixed batching + metrics) behind
+# a vLLM-shaped request/response API.
+from repro.core.kv_cache import OutOfPages, PageAllocator
+from repro.core.metrics import EngineMetrics, RequestMetrics
+from repro.core.outputs import RequestOutput, TokenEvent
+from repro.core.sampler import SamplingParams, sample_tokens
 from repro.core.scheduler import Scheduler
+
+__all__ = [
+    "EngineMetrics", "OutOfPages", "PageAllocator", "RequestMetrics",
+    "RequestOutput", "SamplingParams", "Scheduler", "TokenEvent",
+    "sample_tokens",
+]

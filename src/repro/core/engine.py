@@ -1,6 +1,7 @@
 """The Splitwiser serving engine.
 
-Modes (each maps to one of the paper's experimental arms — DESIGN.md §2):
+Modes (each maps to one of the paper's experimental arms; the benchmark
+suites that exercise them are catalogued in EXPERIMENTS.md):
 
   sequential      — vLLM-style continuous batching: each engine step is
                     EITHER a full-prompt prefill batch OR a decode batch
@@ -15,20 +16,34 @@ Modes (each maps to one of the paper's experimental arms — DESIGN.md §2):
                     chunks share every GEMM in one XLA program (Fig. 9/10
                     "MPSx2"; also the paper's own stated next step, mixed
                     batching, §III-C1).
-  mp2             — two independent engine replicas with split resources
-                    (benchmarks/splitwiser_vllm.py drives this).
+
+("mp2" — two replicas with split resources — is built from two
+"sequential" engines by benchmarks/splitwiser_vllm.py, not a mode here.)
 
 The engine is host-driven with statically-shaped jitted steps (the TPU
 analogue of "instantiate the process once and feed it through queues",
 paper §V): P prefill streams (the paper's #processes knob) x C-token
 chunks + B decode slots.
+
+Request/response surface (vLLM-shaped):
+
+  * each ``Request`` carries its own ``SamplingParams`` (greedy requests
+    batch with sampled ones — one jitted sampler vectorized over per-row
+    parameter arrays);
+  * ``step()`` returns the step's ``TokenEvent`` list, ``stream()``
+    yields events as they happen, ``poll()`` drains finished
+    ``RequestOutput``s;
+  * ``submit()`` is legal mid-run, and ``run(reqs, open_loop=True)``
+    feeds requests in at their ``arrival`` offsets against a virtual
+    clock that fast-forwards idle gaps (timed/open-loop workloads
+    without wall-clock sleeps).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,18 +52,29 @@ import numpy as np
 from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
 from repro.core.metrics import EngineMetrics
-from repro.core.sampler import sample
+from repro.core.outputs import RequestOutput, TokenEvent
+from repro.core.sampler import SamplingParams, greedy_tokens, sample_tokens
 from repro.core.scheduler import Scheduler
 from repro.models import transformer as T
 
 
 @dataclass
 class Request:
+    """One generation request.
+
+    ``arrival=None`` (the default) means "stamp me at submit time"; an
+    explicit value — including ``0.0`` — is preserved, and in open-loop
+    runs is interpreted as an offset (seconds) from the run's start.
+    """
     rid: int
     prompt: List[int]
-    max_new_tokens: int
-    arrival: float = 0.0
+    sampling: SamplingParams = SamplingParams()
+    arrival: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.sampling.max_new_tokens
 
     @property
     def prefill_tokens(self) -> List[int]:
@@ -72,10 +98,29 @@ class _Slot:              # an active decode sequence
     next_token: int
 
 
+class _Clock:
+    """Monotonic engine clock: real time plus a fast-forward offset.
+
+    Open-loop runs jump the offset over idle gaps (nothing to serve until
+    the next arrival) so timed workloads replay at full speed while every
+    timestamp — metrics, events, scheduler trace — stays on one timeline.
+    """
+
+    def __init__(self, base_time_fn):
+        self._base = base_time_fn
+        self._offset = 0.0
+
+    def __call__(self) -> float:
+        return self._base() + self._offset
+
+    def advance_to(self, t: float) -> None:
+        self._offset += max(0.0, t - self())
+
+
 class Engine:
     """Paged-KV serving engine for the transformer family (dense/moe/vlm)."""
 
-    def __init__(self, model, params, serve: ServeConfig, *, eos_id=None,
+    def __init__(self, model, params, serve: ServeConfig, *,
                  time_fn=time.perf_counter):
         assert model.cache_kind == "paged", (
             f"Engine supports paged-cache archs; got {model.cache_kind} "
@@ -84,8 +129,7 @@ class Engine:
         self.cfg = model.cfg
         self.serve = serve
         self.params = params
-        self.eos_id = eos_id
-        self.now = time_fn
+        self.now = _Clock(time_fn)
         self.metrics = EngineMetrics()
         self.alloc = PageAllocator(serve.n_pages, serve.page_size)
         self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
@@ -97,8 +141,9 @@ class Engine:
         dtype = jax.tree.leaves(params)[0].dtype
         self.k_pages, self.v_pages = T.init_pages(
             self.cfg, serve.n_pages, serve.page_size, dtype=dtype)
-        self._key = jax.random.PRNGKey(serve.seed)
         self._step_parity = 0
+        self._events: List[TokenEvent] = []
+        self._outputs: List[RequestOutput] = []
         self.sched = Scheduler(self)
         self._build_jits()
 
@@ -108,7 +153,7 @@ class Engine:
 
     # ------------------------------------------------------------- jits ----
     def _build_jits(self):
-        cfg, serve = self.cfg, self.serve
+        cfg = self.cfg
 
         # full prefill returning per-row last-token logits
         def prefill_full(params, tokens, lens):
@@ -138,33 +183,71 @@ class Engine:
 
     # ------------------------------------------------------------ public ---
     def submit(self, req: Request):
+        """Enqueue a request; legal at any point, including mid-run."""
         if req.rid in self.metrics.requests:
             raise ValueError(
                 f"duplicate request id {req.rid}: metrics/page ownership are "
                 "keyed by rid, so each submitted request needs a fresh one")
-        req.arrival = req.arrival or self.now()
+        if req.arrival is None:
+            req.arrival = self.now()
         self.sched.submit(req)
         m = self.metrics.req(req.rid)
         m.arrival = req.arrival
         m.n_prompt = len(req.prompt)
 
-    def run(self, requests: List[Request], max_steps: int = 100_000) -> EngineMetrics:
-        for r in requests:
-            self.submit(r)
+    def run(self, requests: List[Request], max_steps: int = 100_000, *,
+            open_loop: bool = False) -> EngineMetrics:
+        """Drive the engine until every request (plus anything already
+        submitted) finishes.  ``open_loop=True`` feeds ``requests`` in at
+        their ``arrival`` offsets instead of all at once."""
         self.metrics.t_start = self.now()
-        steps = 0
-        while not self.idle() and steps < max_steps:
-            self.step()
-            steps += 1
+        for _ in self.stream(requests, max_steps=max_steps, open_loop=open_loop):
+            pass
         self.metrics.t_end = self.now()
         return self.metrics
+
+    def stream(self, requests: List[Request] = (), *, open_loop: bool = False,
+               max_steps: int = 100_000) -> Iterator[TokenEvent]:
+        """Yield ``TokenEvent``s as the engine generates them.
+
+        Closed loop (default): submit everything up front.  Open loop:
+        treat each request's ``arrival`` as an offset from now on the
+        virtual clock, submitting it when the clock reaches it and
+        fast-forwarding over idle gaps.
+        """
+        if open_loop:
+            t0 = self.now()
+            pending = deque(sorted(requests,
+                                   key=lambda r: (r.arrival or 0.0, r.rid)))
+        else:
+            pending = deque()
+            for r in requests:
+                self.submit(r)
+        steps = 0
+        while (pending or not self.idle()) and steps < max_steps:
+            while pending and t0 + (pending[0].arrival or 0.0) <= self.now():
+                r = pending.popleft()
+                r.arrival = t0 + (r.arrival or 0.0)
+                self.submit(r)
+            if pending and self.idle():
+                self.now.advance_to(t0 + (pending[0].arrival or 0.0))
+                continue
+            yield from self.step()
+            steps += 1
+
+    def poll(self) -> List[RequestOutput]:
+        """Drain the ``RequestOutput`` of every request finished since the
+        last poll (in finish order)."""
+        out, self._outputs = self._outputs, []
+        return out
 
     def idle(self) -> bool:
         return (not self.waiting and all(s is None for s in self.streams)
                 and all(s is None for s in self.slots))
 
     # ------------------------------------------------------------- steps ---
-    def step(self):
+    def step(self) -> List[TokenEvent]:
+        self._events = []
         mode = self.serve.mode
         n_ev = len(self.metrics.sched_events)
         if mode == "sequential":
@@ -173,8 +256,8 @@ class Engine:
             kind = self._step_timesliced()
         elif mode == "splitwiser_mps":
             kind = self._step_fused()
-        else:
-            raise ValueError(mode)
+        else:   # unreachable: ServeConfig.__post_init__ validates mode
+            raise AssertionError(mode)
         if kind == "idle" and any(
                 e["event"] == "preempt"
                 for e in self.metrics.sched_events[n_ev:]):
@@ -182,6 +265,7 @@ class Engine:
         self.metrics.n_steps += 1
         self.metrics.step_kinds.append(kind)
         self.metrics.kv_usage_trace.append(self.alloc.usage())
+        return self._events
 
     # --- sequential: full-prompt prefill OR decode per step -----------------
     def _step_sequential(self) -> str:
@@ -219,7 +303,7 @@ class Engine:
         v_new = T.kv_to_pages(v, ps)
         self.k_pages, self.v_pages = self._commit(
             self.k_pages, self.v_pages, k_new, v_new, jnp.asarray(dest))
-        toks = self._sample(logits)
+        toks = self._sample_rows(logits, reqs)
         t1 = self.now()
         for i, r in enumerate(reqs):
             self._emit_first_token(r, int(toks[i]), int(lens[i]), t1)
@@ -233,26 +317,47 @@ class Engine:
         m.token_times.append(t)
         req.out_tokens.append(tok)
         m.n_generated = len(req.out_tokens)
-        if self._finished(req):
-            self._finish(req, t)
+        reason = self._finish_reason(req)
+        self._record_event(req, tok, t, reason)
+        if reason is not None:
+            self._finish(req, t, reason)
             return
-        slot_i = self.slots.index(None)
-        self.slots[slot_i] = _Slot(req=req, seq_len=seq_len, next_token=tok)
+        free = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if free is None:
+            raise RuntimeError(
+                f"slot invariant violated: no free decode slot for rid "
+                f"{req.rid} (max_batch={self.serve.max_batch}). Admission is "
+                "bounded by free slots (take_prefillable / _compose_prefill "
+                "backpressure), so an over-full prefill batch is an engine "
+                "bug, not a capacity error.")
+        self.slots[free] = _Slot(req=req, seq_len=seq_len, next_token=tok)
         bt = self.alloc.owned(req.rid)
-        self.block_tables[slot_i, :] = 0
-        self.block_tables[slot_i, : len(bt)] = bt
+        self.block_tables[free, :] = 0
+        self.block_tables[free, : len(bt)] = bt
 
-    def _finished(self, req: Request) -> bool:
-        if len(req.out_tokens) >= req.max_new_tokens:
-            return True
-        return self.eos_id is not None and req.out_tokens and \
-            req.out_tokens[-1] == self.eos_id
+    def _finish_reason(self, req: Request) -> Optional[str]:
+        """None while running, else "length" | "stop" (per-request params)."""
+        if req.out_tokens and req.out_tokens[-1] in req.sampling.stop_set:
+            return "stop"
+        if len(req.out_tokens) >= req.sampling.max_new_tokens:
+            return "length"
+        return None
 
-    def _finish(self, req: Request, t):
+    def _finish(self, req: Request, t, reason: str):
         m = self.metrics.req(req.rid)
         m.t_done = t
         m.n_generated = len(req.out_tokens)
+        m.finish_reason = reason
         self.alloc.free(req.rid)
+        self._outputs.append(RequestOutput(
+            rid=req.rid, prompt=list(req.prompt), tokens=list(req.out_tokens),
+            finish_reason=reason, n_preempted=m.n_preempted,
+            arrival=m.arrival, token_times=list(m.token_times), t_done=t))
+
+    def _record_event(self, req: Request, tok: int, t, reason: Optional[str]):
+        self._events.append(TokenEvent(
+            rid=req.rid, token=tok, index=len(req.out_tokens) - 1, t=t,
+            first=len(req.out_tokens) == 1, finish_reason=reason))
 
     def _reserve_decode_pages(self):
         """Grow every active slot's page table for its next token,
@@ -340,11 +445,16 @@ class Engine:
         return p_tokens, p_start, p_lens, chunks
 
     def _advance_streams(self, chunks, p_logits, t):
+        completing = [None] * len(self.streams)
+        for i, st, n in chunks:
+            if st.pos + n >= len(st.tokens):
+                completing[i] = st.req
+        toks = (self._sample_rows(p_logits, completing)
+                if any(r is not None for r in completing) else None)
         for i, st, n in chunks:
             st.pos += n
             if st.pos >= len(st.tokens):
-                tok = int(self._sample(p_logits[i : i + 1])[0])
-                self._emit_first_token(st.req, tok, len(st.tokens), t)
+                self._emit_first_token(st.req, int(toks[i]), len(st.tokens), t)
                 self.streams[i] = None
 
     def _decode_inputs(self):
@@ -423,7 +533,11 @@ class Engine:
         return "idle"
 
     def _advance_decode(self, d_logits, d_active, t):
-        toks = self._sample(d_logits)
+        rows = [s.req if (s is not None and d_active[i]) else None
+                for i, s in enumerate(self.slots)]
+        if not any(r is not None for r in rows):
+            return
+        toks = self._sample_rows(d_logits, rows)
         for i, s in enumerate(self.slots):
             if s is None or not d_active[i]:
                 continue
@@ -433,16 +547,41 @@ class Engine:
             m = self.metrics.req(s.req.rid)
             m.token_times.append(t)
             m.n_generated = len(s.req.out_tokens)
-            if self._finished(s.req):
-                self._finish(s.req, t)
+            reason = self._finish_reason(s.req)
+            self._record_event(s.req, tok, t, reason)
+            if reason is not None:
+                self._finish(s.req, t, reason)
                 self.slots[i] = None
             else:
                 s.next_token = tok
 
     # ---------------------------------------------------------------- misc -
-    def _sample(self, logits):
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(sample(logits, sub,
-                                 temperature=self.serve.sample_temperature,
-                                 top_k=self.serve.sample_top_k,
-                                 top_p=self.serve.sample_top_p))
+    def _sample_rows(self, logits, reqs: List[Optional[Request]]):
+        """Sample one token per row of ``logits`` using each aligned
+        request's own SamplingParams (None rows are inactive padding:
+        greedy over garbage, discarded by the caller).  Row i's PRNG
+        stream is (seed, rid, len(out_tokens)) — the index of the token
+        being sampled — so results don't depend on batch composition,
+        engine mode, or preemption history."""
+        if all(r is None or r.sampling.temperature <= 0.0 for r in reqs):
+            return np.asarray(greedy_tokens(logits))   # all-greedy fast path
+        B = logits.shape[0]
+        temp = np.zeros((B,), np.float32)
+        top_k = np.zeros((B,), np.int32)
+        top_p = np.ones((B,), np.float32)
+        seed = np.zeros((B,), np.int32)
+        rid = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            if r is None:
+                continue
+            sp = r.sampling
+            temp[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+            seed[i] = sp.seed
+            rid[i] = r.rid
+            pos[i] = len(r.out_tokens)
+        return np.asarray(sample_tokens(
+            logits, jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(seed), jnp.asarray(rid), jnp.asarray(pos)))

@@ -11,7 +11,7 @@ there); it is never allocated.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 
 class OutOfPages(Exception):

@@ -18,6 +18,7 @@ class RequestMetrics:
     n_prompt: int = 0
     n_generated: int = 0
     n_preempted: int = 0         # times this request was evicted + requeued
+    finish_reason: Optional[str] = None   # "length" | "stop" once done
 
     @property
     def ttft(self) -> Optional[float]:
@@ -73,6 +74,10 @@ class EngineMetrics:
             "n_preemptions": sum(r.n_preempted for r in self.requests.values()),
             "n_preempted_requests": sum(
                 1 for r in self.requests.values() if r.n_preempted),
+            "finish_reasons": {
+                reason: sum(1 for r in done if r.finish_reason == reason)
+                for reason in sorted({r.finish_reason for r in done
+                                      if r.finish_reason is not None})},
             "kv_usage_peak": max(self.kv_usage_trace, default=0.0),
             "kv_usage_mean": (sum(self.kv_usage_trace) / len(self.kv_usage_trace))
                              if self.kv_usage_trace else 0.0,

@@ -80,8 +80,10 @@ class Scheduler:
     def admission_pages(self, req) -> int:
         """Pages to budget for admitting `req`: prompt (plus any tokens
         generated before a preemption) + 1, plus `decode_reserve` of the
-        remaining generation as decode headroom."""
-        remaining = max(req.max_new_tokens - len(req.out_tokens), 1)
+        remaining generation as decode headroom.  The generation budget
+        is per-request (``req.sampling.max_new_tokens``), so a mixed
+        queue of short and long requests is budgeted request by request."""
+        remaining = max(req.sampling.max_new_tokens - len(req.out_tokens), 1)
         headroom = int(self.serve.decode_reserve * (remaining - 1))
         n_prefill = len(req.prompt) + len(req.out_tokens)
         return self.alloc.pages_needed(n_prefill + 1 + headroom)

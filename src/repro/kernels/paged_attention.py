@@ -26,7 +26,6 @@ d and ps chosen as multiples of 128/64 to keep the systolic array full.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

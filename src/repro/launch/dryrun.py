@@ -23,7 +23,7 @@ import jax
 from repro.configs.registry import ASSIGNED, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze
-from repro.launch.steps import SHAPES, build_cell
+from repro.launch.steps import build_cell
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
                "mixed_32k"]

@@ -10,7 +10,6 @@ models, this only happens for genuinely tiny tensors).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

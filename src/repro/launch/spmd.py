@@ -19,11 +19,10 @@ global ids to local ones).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 try:
     from jax.experimental.shard_map import shard_map

@@ -13,9 +13,7 @@ prompt streams x 2048-token chunks + 128 decode slots @32k).
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,8 +55,7 @@ def cell_supported(cfg, shape_name: str):
     if shape_name == "long_500k":
         if not cfg.supports_long_context:
             return False, ("full-attention KV residency at 524288 ctx; "
-                           "needs context-streaming attention (DESIGN.md "
-                           "§Arch-applicability) — skipped")
+                           "needs context-streaming attention — skipped")
     if shape_name == "mixed_32k" and cfg.family not in ("dense", "moe", "vlm"):
         return False, "mixed fused step is transformer-family (paper cell)"
     return True, ""

@@ -12,8 +12,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs import TrainConfig, get_config
 from repro.data import make_train_data_fn

@@ -9,7 +9,6 @@ The shared block takes concat(hidden, initial_embedding) [2D] as input
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

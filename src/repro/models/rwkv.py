@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import rms_norm
 from repro.models.sharding import constrain
 from repro.models.transformer import pad_vocab, unembed
 
@@ -92,8 +92,8 @@ def mixed(params, cfg, mb, p_state, d_state, *, tp=1, policy=None):
 
     Prefill chunks and decode tokens run in one jitted program (phase
     co-residency); the projection GEMMs are not merged across phases for
-    SSMs (documented in DESIGN.md §4 — sequence-structure ops separate the
-    phases before the GEMMs).
+    SSMs (sequence-structure ops separate the phases before the GEMMs;
+    see models/ssm.py).
     mb: p_tokens [P, C], p_lens [P]; d_tokens [B], d_active [B].
     """
     del tp

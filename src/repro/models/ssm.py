@@ -6,7 +6,7 @@ Both are implemented twice:
   * recurrent form (decode) — O(1) state update, the bandwidth-bound
     "token phase".
 The phase asymmetry the paper exploits therefore exists for SSMs too,
-and the Splitwiser mixed step applies (DESIGN.md §4).
+and the Splitwiser mixed step applies (see models/rwkv.py:mixed).
 
 All decay exponentials are evaluated as exp(ΔlogP) with ΔlogP <= 0, so the
 chunkwise forms are numerically safe for any chunk length.
@@ -14,7 +14,6 @@ chunkwise forms are numerically safe for any chunk length.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,6 @@ gradient, zero contribution). See `gqa_layout`.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ optimizer-state HBM ~7x for the grok-1-314b training shape; see
 EXPERIMENTS.md §Perf)."""
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -17,7 +17,6 @@ from __future__ import annotations
 import os
 import time
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Optional
 
 import jax

@@ -25,7 +25,6 @@ def reduced_model(arch):
 
 
 def family_batch(cfg, B, T, key=1):
-    import jax.numpy as jnp
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, T), 0,
                                           cfg.vocab_size)}
     if cfg.family == "encdec":

@@ -1,0 +1,272 @@
+"""The vLLM-shaped request/response API surface.
+
+Per-request ``SamplingParams`` honored identically in every engine mode,
+``TokenEvent`` streams well-ordered, ``RequestOutput`` polling, open-loop
+arrivals respecting timestamps, and seeded sampling independent of batch
+composition — plus regressions for the arrival-sentinel and slot-invariant
+fixes.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import ServeConfig
+from repro.core.engine import Engine, Request, SamplingParams
+
+ARCH = "qwen3-0.6b"
+MODES = ["sequential", "splitwiser", "splitwiser_mps"]
+SERVE = ServeConfig(mode="sequential", max_batch=4, page_size=4, n_pages=128,
+                    max_pages_per_seq=16, prefill_chunk=4, n_streams=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    prompts = [list(rng.randint(2, model.cfg.vocab_size,
+                                size=rng.randint(5, 18))) for _ in range(4)]
+    return model, params, prompts
+
+
+def _mixed_requests(prompts):
+    """One batch, four different sampling policies."""
+    policies = [
+        SamplingParams(max_new_tokens=6),                          # greedy
+        SamplingParams(max_new_tokens=8, temperature=0.8, seed=7),
+        SamplingParams(max_new_tokens=5, temperature=1.0, top_k=3, seed=9),
+        SamplingParams(max_new_tokens=7, temperature=0.9, top_p=0.8, seed=3),
+    ]
+    return [Request(rid=i, prompt=list(p), sampling=policies[i])
+            for i, p in enumerate(prompts)]
+
+
+# ------------------------------------------------- per-request sampling ----
+def test_per_request_params_agree_across_modes(setup):
+    """A heterogeneous batch (greedy + temperature + top-k + top-p, mixed
+    budgets) must produce the same per-request tokens in every mode."""
+    model, params, prompts = setup
+    per_mode = {}
+    for mode in MODES:
+        eng = Engine(model, params, dataclasses.replace(SERVE, mode=mode))
+        reqs = _mixed_requests(prompts)
+        eng.run(reqs, max_steps=1000)
+        per_mode[mode] = [r.out_tokens for r in reqs]
+        for r in reqs:
+            assert len(r.out_tokens) == r.sampling.max_new_tokens
+    assert per_mode["sequential"] == per_mode["splitwiser"]
+    assert per_mode["sequential"] == per_mode["splitwiser_mps"]
+
+
+def test_seeded_sampling_independent_of_batch_composition(setup):
+    """(seed, rid, pos)-derived streams: a request's sampled tokens don't
+    change when other requests share (or leave) the batch."""
+    model, params, prompts = setup
+    sp = SamplingParams(max_new_tokens=6, temperature=1.0, seed=5)
+    eng = Engine(model, params, SERVE)
+    alone = Request(rid=2, prompt=list(prompts[2]), sampling=sp)
+    eng.run([alone], max_steps=1000)
+    eng = Engine(model, params, dataclasses.replace(SERVE,
+                                                    mode="splitwiser_mps"))
+    reqs = _mixed_requests(prompts)
+    reqs[2] = Request(rid=2, prompt=list(prompts[2]), sampling=sp)
+    eng.run(reqs, max_steps=1000)
+    assert reqs[2].out_tokens == alone.out_tokens
+
+
+def test_seed_changes_sampled_tokens(setup):
+    model, params, prompts = setup
+    outs = []
+    for seed in (0, 1):
+        eng = Engine(model, params, SERVE)
+        r = Request(rid=0, prompt=list(prompts[0]),
+                    sampling=SamplingParams(max_new_tokens=8, temperature=1.0,
+                                            seed=seed))
+        eng.run([r], max_steps=1000)
+        outs.append(r.out_tokens)
+    assert outs[0] != outs[1]
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        SamplingParams(max_new_tokens=0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+
+
+# ------------------------------------------------------- events/outputs ----
+@pytest.mark.parametrize("mode", MODES)
+def test_stream_event_ordering(setup, mode):
+    model, params, prompts = setup
+    eng = Engine(model, params, dataclasses.replace(SERVE, mode=mode))
+    events = list(eng.stream(_mixed_requests(prompts), max_steps=1000))
+    outs = {o.rid: o for o in eng.poll()}
+    assert [e.t for e in events] == sorted(e.t for e in events)
+    by_rid = {}
+    for e in events:
+        by_rid.setdefault(e.rid, []).append(e)
+    assert set(by_rid) == set(outs)
+    for rid, evs in by_rid.items():
+        assert [e.index for e in evs] == list(range(len(evs)))
+        assert [e.first for e in evs] == [True] + [False] * (len(evs) - 1)
+        assert [e.finish_reason for e in evs[:-1]] == [None] * (len(evs) - 1)
+        assert evs[-1].finish_reason in ("length", "stop")
+        assert [e.token for e in evs] == outs[rid].tokens
+        assert [e.t for e in evs] == outs[rid].token_times
+
+
+def test_poll_drains_once(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    eng.run(_mixed_requests(prompts), max_steps=1000)
+    outs = eng.poll()
+    assert len(outs) == len(prompts)
+    assert eng.poll() == []
+    for o in outs:
+        assert o.ttft is not None and o.ttft >= 0
+        assert o.e2e >= 0 and o.t_done >= o.arrival
+        assert len(o.token_times) == len(o.tokens)
+
+
+def test_stop_token_finish_reason(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    r = Request(rid=0, prompt=list(prompts[0]),
+                sampling=SamplingParams(max_new_tokens=5))
+    eng.run([r], max_steps=1000)
+    first = r.out_tokens[0]
+    eng = Engine(model, params, SERVE)
+    r2 = Request(rid=0, prompt=list(prompts[0]),
+                 sampling=SamplingParams(max_new_tokens=5,
+                                         stop_token_ids=(first,)))
+    eng.run([r2], max_steps=1000)
+    (out,) = eng.poll()
+    assert out.tokens == [first]
+    assert out.finish_reason == "stop"
+
+
+def test_step_returns_events(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    eng.submit(Request(rid=0, prompt=list(prompts[0]),
+                       sampling=SamplingParams(max_new_tokens=3)))
+    all_events = []
+    for _ in range(100):
+        if eng.idle():
+            break
+        all_events.extend(eng.step())
+    assert [e.index for e in all_events] == [0, 1, 2]
+
+
+# ----------------------------------------------------- open-loop arrivals --
+def test_open_loop_respects_arrival_timestamps(setup):
+    model, params, prompts = setup
+    offsets = [0.0, 0.3, 0.6, 0.9]
+    eng = Engine(model, params, SERVE)
+    reqs = [Request(rid=i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=3), arrival=offsets[i])
+            for i, p in enumerate(prompts)]
+    m = eng.run(reqs, open_loop=True, max_steps=2000)
+    assert m.summary()["n_done"] == len(prompts)
+    t0 = min(m.req(i).arrival for i in range(len(prompts)))
+    for i, off in enumerate(offsets):
+        r = m.req(i)
+        assert r.arrival == pytest.approx(t0 + off)   # offsets preserved
+        assert r.t_first_token >= r.arrival           # no time travel
+    admit_t = {e["rid"]: e["t"] for e in m.sched_events
+               if e["event"] == "admit"}
+    for i in range(len(prompts)):
+        assert admit_t[i] >= m.req(i).arrival
+
+
+def test_open_loop_matches_closed_loop_tokens(setup):
+    """Arrival timing shifts latency, never tokens (greedy)."""
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    closed = _mixed_requests(prompts)
+    eng.run(closed, max_steps=1000)
+    eng = Engine(model, params, SERVE)
+    opened = _mixed_requests(prompts)
+    for i, r in enumerate(opened):
+        r.arrival = 0.05 * i
+    eng.run(opened, open_loop=True, max_steps=2000)
+    assert [r.out_tokens for r in opened] == [r.out_tokens for r in closed]
+
+
+def test_submit_is_legal_mid_run(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    eng.submit(Request(rid=0, prompt=list(prompts[0]),
+                       sampling=SamplingParams(max_new_tokens=4)))
+    eng.step()                                   # engine is now mid-run
+    eng.submit(Request(rid=1, prompt=list(prompts[1]),
+                       sampling=SamplingParams(max_new_tokens=4)))
+    m = eng.run([], max_steps=1000)              # drain both
+    assert m.summary()["n_done"] == 2
+    assert {o.rid for o in eng.poll()} == {0, 1}
+
+
+def test_submit_preserves_explicit_zero_arrival(setup):
+    """Regression: `arrival or now()` treated an explicit 0.0 as unset."""
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    r = Request(rid=0, prompt=list(prompts[0]),
+                sampling=SamplingParams(max_new_tokens=2), arrival=0.0)
+    eng.submit(r)
+    assert r.arrival == 0.0
+    assert eng.metrics.req(0).arrival == 0.0
+    r2 = Request(rid=1, prompt=list(prompts[1]),
+                 sampling=SamplingParams(max_new_tokens=2))
+    eng.submit(r2)
+    assert r2.arrival is not None and r2.arrival > 0.0   # stamped at submit
+
+
+# -------------------------------------------------------- config / slots ---
+def test_unknown_mode_rejected_at_config():
+    with pytest.raises(ValueError, match="supported modes"):
+        ServeConfig(mode="splitwise")
+    with pytest.raises(ValueError, match="supported modes"):
+        dataclasses.replace(SERVE, mode="mp2")
+
+
+def test_sequential_admission_never_overfills_slots(setup):
+    """Admission is bounded by free decode slots: with max_batch=2 and 6
+    requests, active slots never exceed 2 and no prefill batch is larger
+    than the free-slot count (the `_emit_first_token` invariant)."""
+    model, params, prompts = setup
+    serve = dataclasses.replace(SERVE, max_batch=2)
+    eng = Engine(model, params, serve)
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=list(prompts[i % len(prompts)]),
+                           sampling=SamplingParams(max_new_tokens=4)))
+    orig = eng._do_full_prefill
+
+    def spy(reqs):
+        assert len(reqs) <= sum(s is None for s in eng.slots)
+        return orig(reqs)
+
+    eng._do_full_prefill = spy
+    for _ in range(500):
+        if eng.idle():
+            break
+        eng.step()
+        assert sum(s is not None for s in eng.slots) <= 2
+    assert eng.metrics.summary()["n_done"] == 6
+
+
+def test_overfull_slots_raise_clear_invariant_error(setup):
+    """If the invariant ever breaks, the error must say so instead of the
+    seed's bare `ValueError: None is not in list`."""
+    model, params, prompts = setup
+    eng = Engine(model, params, SERVE)
+    r = Request(rid=99, prompt=list(prompts[0]),
+                sampling=SamplingParams(max_new_tokens=4))
+    eng.submit(r)
+    eng.slots = [object()] * len(eng.slots)      # simulate the broken state
+    with pytest.raises(RuntimeError, match="slot invariant"):
+        eng._emit_first_token(r, tok=1, seq_len=4, t=0.0)

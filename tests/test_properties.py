@@ -8,7 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.kv_cache import OutOfPages, PageAllocator
+from repro.core.kv_cache import PageAllocator
 
 
 # ------------------------------------------------------------- allocator ---
@@ -55,26 +55,52 @@ def test_allocator_free_returns_everything(n_pages, ps, tokens):
 
 
 # --------------------------------------------------------------- sampler ---
+def _params_rows(B, *, temperature=0.0, top_k=0, top_p=1.0, seed=0, pos=0):
+    """Uniform per-row parameter arrays for sample_tokens."""
+    return (jnp.full((B,), temperature, jnp.float32),
+            jnp.full((B,), top_k, jnp.int32),
+            jnp.full((B,), top_p, jnp.float32),
+            jnp.full((B,), seed, jnp.int32),
+            jnp.arange(B, dtype=jnp.int32),          # rid
+            jnp.full((B,), pos, jnp.int32))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 50))
 def test_sampler_greedy_is_argmax(seed, B, V):
-    from repro.core.sampler import sample
+    from repro.core.sampler import sample_tokens
     logits = jax.random.normal(jax.random.PRNGKey(seed), (B, V))
-    toks = sample(logits, jax.random.PRNGKey(seed + 1), temperature=0.0)
+    toks = sample_tokens(logits, *_params_rows(B))
     assert (np.asarray(toks) == np.asarray(logits.argmax(-1))).all()
 
 
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_sampler_topk_support(seed):
-    from repro.core.sampler import sample
+    from repro.core.sampler import sample_tokens
     logits = jax.random.normal(jax.random.PRNGKey(seed), (4, 64))
     k = 5
-    toks = np.asarray(sample(logits, jax.random.PRNGKey(seed + 1),
-                             temperature=1.0, top_k=k))
+    toks = np.asarray(sample_tokens(
+        logits, *_params_rows(4, temperature=1.0, top_k=k, seed=seed)))
     topk = np.asarray(jax.lax.top_k(logits, k)[1])
     for b in range(4):
         assert toks[b] in topk[b]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_sampler_rows_are_independent(seed, B):
+    """A row's token depends only on its own (logits, params, rid, pos)
+    triple — never on what else is in the batch."""
+    from repro.core.sampler import sample_tokens
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (B, 32))
+    temp, tk, tp, sd, rid, pos = _params_rows(B, temperature=0.9, seed=seed)
+    full = np.asarray(sample_tokens(logits, temp, tk, tp, sd, rid, pos))
+    for b in range(B):
+        alone = np.asarray(sample_tokens(
+            logits[b:b + 1], temp[b:b + 1], tk[b:b + 1], tp[b:b + 1],
+            sd[b:b + 1], rid[b:b + 1], pos[b:b + 1]))
+        assert alone[0] == full[b]
 
 
 # --------------------------------------------------- scheduler conservation
@@ -83,7 +109,7 @@ def test_sampler_topk_support(seed):
 def test_engine_conserves_requests(data):
     from conftest import reduced_model
     from repro.configs import ServeConfig
-    from repro.core.engine import Engine, Request
+    from repro.core.engine import Engine, Request, SamplingParams
     model = reduced_model("qwen3-0.6b")
     mode = data.draw(st.sampled_from(
         ["sequential", "splitwiser", "splitwiser_mps"]))
@@ -94,7 +120,7 @@ def test_engine_conserves_requests(data):
     eng = Engine(model, params, serve)
     rng = np.random.RandomState(data.draw(st.integers(0, 100)))
     reqs = [Request(rid=i, prompt=list(rng.randint(2, 200, rng.randint(3, 12))),
-                    max_new_tokens=int(rng.randint(1, 6)))
+                    sampling=SamplingParams(max_new_tokens=int(rng.randint(1, 6))))
             for i in range(n_req)]
     m = eng.run(reqs, max_steps=2000)
     s = m.summary()

@@ -14,7 +14,7 @@ import pytest
 
 from conftest import reduced_model
 from repro.configs import ServeConfig
-from repro.core.engine import Engine, Request
+from repro.core.engine import Engine, Request, SamplingParams
 from repro.core.kv_cache import OutOfPages
 
 ARCH = "qwen3-0.6b"
@@ -38,7 +38,7 @@ def setup():
     # unpreempted baseline (generous pool); all modes are oracle-exact,
     # so one mode suffices as the reference
     eng = Engine(model, params, dataclasses.replace(BIG, mode="sequential"))
-    base = [Request(rid=i, prompt=list(p), max_new_tokens=N_NEW)
+    base = [Request(rid=i, prompt=list(p), sampling=SamplingParams(max_new_tokens=N_NEW))
             for i, p in enumerate(prompts)]
     m = eng.run(base, max_steps=4000)
     assert m.summary()["n_preemptions"] == 0
@@ -46,7 +46,7 @@ def setup():
 
 
 def _requests(prompts):
-    return [Request(rid=i, prompt=list(p), max_new_tokens=N_NEW)
+    return [Request(rid=i, prompt=list(p), sampling=SamplingParams(max_new_tokens=N_NEW))
             for i, p in enumerate(prompts)]
 
 
@@ -92,9 +92,9 @@ def test_seed_policy_none_still_crashes(setup):
 def test_submit_rejects_duplicate_rid(setup):
     model, params, prompts, _ = setup
     eng = Engine(model, params, dataclasses.replace(BIG, mode="sequential"))
-    eng.submit(Request(rid=7, prompt=list(prompts[0]), max_new_tokens=2))
+    eng.submit(Request(rid=7, prompt=list(prompts[0]), sampling=SamplingParams(max_new_tokens=2)))
     with pytest.raises(ValueError, match="duplicate request id"):
-        eng.submit(Request(rid=7, prompt=list(prompts[1]), max_new_tokens=2))
+        eng.submit(Request(rid=7, prompt=list(prompts[1]), sampling=SamplingParams(max_new_tokens=2)))
 
 
 def test_timesliced_skips_empty_prefill_dispatch(setup):
@@ -113,8 +113,8 @@ def test_timesliced_skips_empty_prefill_dispatch(setup):
         return orig(p, mb, kpg, vpg)
 
     eng._mixed = spy
-    reqs = [Request(rid=0, prompt=list(prompts[0][:4]), max_new_tokens=12),
-            Request(rid=1, prompt=list(prompts[1][:4]), max_new_tokens=4)]
+    reqs = [Request(rid=0, prompt=list(prompts[0][:4]), sampling=SamplingParams(max_new_tokens=12)),
+            Request(rid=1, prompt=list(prompts[1][:4]), sampling=SamplingParams(max_new_tokens=4))]
     m = eng.run(reqs, max_steps=2000)
     assert m.summary()["n_done"] == 2
     assert all(p_sum > 0 or d_size > 0 for p_sum, d_size in dispatches), \
@@ -134,7 +134,7 @@ def test_admission_honours_watermark(setup):
                   max_pages_per_seq=8, watermark=0.25, decode_reserve=0.5)
     for i in range(5):
         eng.submit(Request(rid=i, prompt=list(prompts[0][:8]),
-                           max_new_tokens=9))
+                           sampling=SamplingParams(max_new_tokens=9)))
     batch = eng.sched.take_prefillable()
     assert len(batch) == 3
     assert len(eng.waiting) == 2
@@ -148,7 +148,7 @@ def test_admission_head_of_line_progress_override(setup):
                   max_pages_per_seq=12, watermark=0.25, decode_reserve=1.0)
     # bare: ceil(41/4) = 11 <= 16 free, but budgeted need is far larger
     big = Request(rid=0, prompt=list(np.tile(prompts[0], 4)[:40]),
-                  max_new_tokens=64)
+                  sampling=SamplingParams(max_new_tokens=64))
     eng.submit(big)
     batch = eng.sched.take_prefillable()
     assert [r.rid for r in batch] == [0]
@@ -159,7 +159,7 @@ def test_unservable_request_raises_clear_error(setup):
     eng = _engine(model, params, max_batch=4, page_size=4, n_pages=9,
                   max_pages_per_seq=32)
     eng.submit(Request(rid=0, prompt=list(np.tile(prompts[0], 10)[:100]),
-                       max_new_tokens=4))
+                       sampling=SamplingParams(max_new_tokens=4)))
     with pytest.raises(OutOfPages, match="pool only has"):
         eng.sched.take_prefillable()
 
@@ -172,7 +172,7 @@ def test_block_table_overflow_raises_clear_error(setup):
     eng = _engine(model, params, max_batch=4, page_size=4, n_pages=20,
                   max_pages_per_seq=3)
     eng.submit(Request(rid=0, prompt=list(np.tile(prompts[0], 4)[:40]),
-                       max_new_tokens=4))
+                       sampling=SamplingParams(max_new_tokens=4)))
     with pytest.raises(OutOfPages, match="max_pages_per_seq"):
         eng.sched.take_prefillable()
     # generation outgrows the row mid-decode: rejected at extension
@@ -180,7 +180,7 @@ def test_block_table_overflow_raises_clear_error(setup):
                   max_pages_per_seq=3)
     with pytest.raises(OutOfPages, match="max_pages_per_seq"):
         eng.run([Request(rid=0, prompt=list(prompts[0][:8]),
-                         max_new_tokens=30)], max_steps=200)
+                         sampling=SamplingParams(max_new_tokens=30))], max_steps=200)
 
 
 def test_invalid_preempt_policy_rejected(setup):

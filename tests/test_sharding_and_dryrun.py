@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config
 from repro.configs.registry import ASSIGNED
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

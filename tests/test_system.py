@@ -8,7 +8,7 @@ import pytest
 
 from conftest import reduced_model
 from repro.configs import ServeConfig
-from repro.core.engine import Engine, Request
+from repro.core.engine import Engine, Request, SamplingParams
 from repro.models import transformer as T
 
 ARCH = "qwen3-0.6b"
@@ -41,12 +41,17 @@ def test_mode_matches_oracle(setup, mode):
     serve = ServeConfig(mode=mode, max_batch=4, page_size=4, n_pages=128,
                         max_pages_per_seq=16, prefill_chunk=4, n_streams=2)
     eng = Engine(model, params, serve)
-    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=N_NEW)
+    reqs = [Request(rid=i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=N_NEW))
             for i, p in enumerate(prompts)]
     m = eng.run(reqs, max_steps=1000)
     assert [r.out_tokens for r in reqs] == oracle
+    outs = {o.rid: o for o in eng.poll()}
+    assert [outs[i].tokens for i in range(len(prompts))] == oracle
+    assert all(o.finish_reason == "length" for o in outs.values())
     s = m.summary()
     assert s["n_done"] == len(prompts)
+    assert s["finish_reasons"] == {"length": len(prompts)}
     assert s["throughput_tok_s"] > 0
     assert s["ttft"]["mean"] is not None and s["ttft"]["mean"] >= 0
     assert 0 < s["kv_usage_peak"] <= 1.0
@@ -59,7 +64,8 @@ def test_mode_step_kinds(setup):
         serve = ServeConfig(mode=mode, max_batch=4, page_size=4, n_pages=128,
                             max_pages_per_seq=16, prefill_chunk=4, n_streams=2)
         eng = Engine(model, params, serve)
-        reqs = [Request(rid=i, prompt=list(p), max_new_tokens=N_NEW)
+        reqs = [Request(rid=i, prompt=list(p),
+                        sampling=SamplingParams(max_new_tokens=N_NEW))
                 for i, p in enumerate(prompts)]
         eng.run(reqs, max_steps=1000)
         kinds = set(eng.metrics.step_kinds) - {"idle"}
@@ -80,23 +86,35 @@ def test_mixed_batching_reduces_steps(setup):
                             max_pages_per_seq=32, prefill_chunk=4, n_streams=2)
         eng = Engine(model, params, serve)
         long_prompt = list(np.random.RandomState(7).randint(2, 200, size=64))
-        reqs = [Request(rid=0, prompt=list(prompts[0]), max_new_tokens=20),
-                Request(rid=1, prompt=long_prompt, max_new_tokens=4)]
+        reqs = [Request(rid=0, prompt=list(prompts[0]),
+                        sampling=SamplingParams(max_new_tokens=20)),
+                Request(rid=1, prompt=long_prompt,
+                        sampling=SamplingParams(max_new_tokens=4))]
         eng.run(reqs, max_steps=1000)
         results[mode] = eng.metrics.n_steps
     assert results["splitwiser_mps"] < results["splitwiser"], results
 
 
 def test_eos_termination(setup):
+    """eos_id is a per-request SamplingParams knob, not engine state."""
     model, params, prompts, _ = setup
     serve = ServeConfig(mode="sequential", max_batch=4, page_size=4,
                         n_pages=128, max_pages_per_seq=16)
     eng0 = Engine(model, params, serve)
-    r = Request(rid=0, prompt=list(prompts[0]), max_new_tokens=5)
+    r = Request(rid=0, prompt=list(prompts[0]),
+                sampling=SamplingParams(max_new_tokens=5))
     eng0.run([r])
     first = r.out_tokens[0]
-    eng = Engine(model, params, serve, eos_id=first)
-    r2 = Request(rid=0, prompt=list(prompts[0]), max_new_tokens=5)
-    eng.run([r2])
+    eng = Engine(model, params, serve)
+    r2 = Request(rid=0, prompt=list(prompts[0]),
+                 sampling=SamplingParams(max_new_tokens=5, eos_id=first))
+    # an eos-less request in the SAME batch keeps generating
+    r3 = Request(rid=1, prompt=list(prompts[0]),
+                 sampling=SamplingParams(max_new_tokens=5))
+    eng.run([r2, r3])
     assert r2.out_tokens[0] == first and len(r2.out_tokens) == 1
+    assert len(r3.out_tokens) == 5
+    outs = {o.rid: o for o in eng.poll()}
+    assert outs[0].finish_reason == "stop"
+    assert outs[1].finish_reason == "length"
     assert eng.alloc.n_allocated == 0
