@@ -17,7 +17,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import batching, kv_usage, open_loop, phase_intensity
-    from benchmarks import pressure, splitwiser_hf, splitwiser_vllm
+    from benchmarks import pressure, shared_prefix, splitwiser_hf
+    from benchmarks import splitwiser_vllm
 
     suites = [
         ("phase_intensity", phase_intensity.rows),   # Figs 2-4
@@ -27,6 +28,7 @@ def main() -> None:
         ("batching", batching.rows),                 # Figs 12-13
         ("pressure", pressure.rows),                 # beyond-paper: KV pressure
         ("open_loop", open_loop.rows),               # beyond-paper: Poisson arrivals
+        ("shared_prefix", shared_prefix.rows),       # beyond-paper: prefix cache
     ]
     all_rows = []
     print("name,us_per_call,derived")
@@ -90,6 +92,20 @@ def main() -> None:
             checks.append(("every first token lands at/after its request's "
                            "arrival (timed admission)",
                            all(r["respects_arrivals"] for r in ol)))
+        sp = by("shared_prefix_delta")
+        if sp:
+            k1 = [r for r in sp if "K=1" in str(r["x"])][0]
+            kun = sp[-1]    # K == N: every prompt unique
+            checks.append(("prefix cache skips prefill work when every "
+                           "request shares one system prompt (K=1)",
+                           k1["prefill_tokens_saved"] > 0
+                           and k1["hit_rate_on"] > 0))
+            checks.append(("shared pages lower peak KV usage at K=1",
+                           k1["kv_peak_on"] < k1["kv_peak_off"]))
+            checks.append(("cache benefit shrinks as prompts diversify "
+                           "(K=1 saves more than K=N)",
+                           k1["prefill_tokens_saved"]
+                           >= kun["prefill_tokens_saved"]))
         f10 = by("fig10_elapsed")
         if f10:
             big = f10[-1]

@@ -151,12 +151,22 @@ class ServeConfig:
                                  # as decode headroom when admitting a request
     preempt_policy: str = "latest"  # latest: evict latest-arrival + recompute
                                     # none:   seed behaviour (OutOfPages crash)
+    # --- shared-prefix KV cache (core/prefix_cache.py) ---
+    enable_prefix_cache: bool = False   # refcounted copy-on-write page sharing
+    prefix_cache_policy: str = "lru"    # reclaimable-page eviction order:
+                                        # lru (last hit) | fifo (insertion)
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
             raise ValueError(
                 f"unknown serve mode {self.mode!r}; supported modes: "
                 f"{', '.join(SERVE_MODES)}")
+        # imported here to keep configs free of core deps at module load
+        from repro.core.prefix_cache import PREFIX_CACHE_POLICIES
+        if self.prefix_cache_policy not in PREFIX_CACHE_POLICIES:
+            raise ValueError(
+                f"unknown prefix_cache_policy {self.prefix_cache_policy!r}; "
+                f"supported: {', '.join(PREFIX_CACHE_POLICIES)}")
 
 
 @dataclass(frozen=True)

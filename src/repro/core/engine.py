@@ -37,6 +37,14 @@ Request/response surface (vLLM-shaped):
     feeds requests in at their ``arrival`` offsets against a virtual
     clock that fast-forwards idle gaps (timed/open-loop workloads
     without wall-clock sleeps).
+
+With ``ServeConfig.enable_prefix_cache`` the engine consults a
+shared-prefix KV cache (``core/prefix_cache.py``) at every admission:
+hit pages are refcount-mapped into the request's block table and prefill
+starts at the first uncached token — ``sequential`` computes only the
+suffix through the paged mixed kernel, the splitwiser modes fast-forward
+their streams past cached chunks, and preempted victims resume by
+remapping their own just-freed pages.
 """
 from __future__ import annotations
 
@@ -53,6 +61,7 @@ from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
 from repro.core.metrics import EngineMetrics
 from repro.core.outputs import RequestOutput, TokenEvent
+from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SamplingParams, greedy_tokens, sample_tokens
 from repro.core.scheduler import Scheduler
 from repro.models import transformer as T
@@ -68,7 +77,9 @@ class Request:
     """
     rid: int
     prompt: List[int]
-    sampling: SamplingParams = SamplingParams()
+    # default_factory: a shared default instance would alias one params
+    # object across every request constructed without explicit sampling
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     arrival: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
 
@@ -131,7 +142,13 @@ class Engine:
         self.params = params
         self.now = _Clock(time_fn)
         self.metrics = EngineMetrics()
-        self.alloc = PageAllocator(serve.n_pages, serve.page_size)
+        self.prefix_cache = (
+            PrefixCache(serve.page_size, policy=serve.prefix_cache_policy)
+            if serve.enable_prefix_cache else None)
+        self.alloc = PageAllocator(serve.n_pages, serve.page_size,
+                                   cache=self.prefix_cache,
+                                   event_cb=self._alloc_event)
+        self._pages_shared_peak = 0
         self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
         self.slots: List[Optional[_Slot]] = [None] * serve.max_batch
         self.block_tables = np.zeros((serve.max_batch, serve.max_pages_per_seq),
@@ -215,8 +232,8 @@ class Engine:
         virtual clock, submitting it when the clock reaches it and
         fast-forwarding over idle gaps.
         """
-        if open_loop:
-            t0 = self.now()
+        t0 = self.now()      # bound for both loops: the arrival-feed
+        if open_loop:        # condition below reads it unconditionally
             pending = deque(sorted(requests,
                                    key=lambda r: (r.arrival or 0.0, r.rid)))
         else:
@@ -245,6 +262,95 @@ class Engine:
         return (not self.waiting and all(s is None for s in self.streams)
                 and all(s is None for s in self.slots))
 
+    # ------------------------------------------------------ prefix cache ---
+    def _alloc_event(self, event: str, **detail):
+        """Allocator trace hook (reclaim / cow) into the scheduler trace."""
+        self.metrics.sched_events.append(
+            {"t": self.now(), "event": event, **detail})
+
+    def _cache_match(self, tokens: List[int]):
+        """(n_cached_tokens, hit_pages) for ``tokens``.
+
+        Hits are full-page-granular and capped at least one token below
+        the prefill length: the engine always recomputes the final token
+        (it needs its logits to sample from), so cached spans never reach
+        a position the engine will write — shared pages stay read-only on
+        every engine path (``PageAllocator.prepare_write`` guards the
+        rest).
+        """
+        if self.prefix_cache is None:
+            return 0, []
+        pages = self.prefix_cache.match(tokens)
+        cap = (len(tokens) - 1) // self.serve.page_size
+        pages = pages[:cap]
+        return len(pages) * self.serve.page_size, pages
+
+    def cache_probe(self, req: Request):
+        """One trie walk answering both admission questions:
+        ``(n_hit, n_free)`` — pages of ``req``'s next prefill the cache
+        would serve (remap instead of recompute), and the subset of those
+        already referenced by a live request, which are *budget-free*.
+        The scheduler charges everything else — misses AND reclaimable
+        hits, since reviving a parked page consumes free capacity just
+        like a fresh allocation (it only saves the recompute)."""
+        pages = self._cache_match(req.prefill_tokens)[1]
+        return len(pages), sum(1 for p in pages if self.alloc.is_referenced(p))
+
+    def _map_cached(self, req: Request) -> int:
+        """Admission-time cache consult: map hit pages into the request's
+        refcounted ownership and return the cached token count.  Prefill
+        then starts at the first uncached token."""
+        n, pages = self._cache_match(req.prefill_tokens)
+        if n:
+            self.alloc.share(req.rid, pages)
+            self.prefix_cache.touch(pages)
+            self.metrics.req(req.rid).n_cached_tokens += n
+            self.metrics.n_cached_tokens += n
+        return n
+
+    def cache_insert(self, req: Request, n_committed: int) -> None:
+        """Register ``req``'s committed-KV full pages with the cache.
+
+        Called after prefill work lands, at finish, and at preemption
+        (scheduler) — the last one is what turns a preempted victim's
+        recompute-on-resume into a remap of its own just-freed pages.
+        """
+        if self.prefix_cache is None:
+            return
+        n_full = n_committed // self.serve.page_size
+        if n_full <= 0:
+            return
+        tokens = (req.prompt + req.out_tokens)[: n_full * self.serve.page_size]
+        self.prefix_cache.insert(tokens, self.alloc.owned(req.rid)[:n_full])
+
+    def _apply_cow(self, pairs) -> None:
+        """Materialize allocator copy-on-write decisions on the device
+        pool (copy src page contents into the writer's private dst)."""
+        if not pairs:
+            return
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
+        self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+
+    def _refresh_cache_stats(self) -> None:
+        self._pages_shared_peak = max(self._pages_shared_peak,
+                                      self.alloc.n_pages_shared)
+        self.metrics.prefix_cache_stats = dict(
+            enabled=int(self.prefix_cache is not None),
+            n_reclaims=self.alloc.n_reclaims,
+            n_cow=self.alloc.n_cow,
+            n_shared_maps=self.alloc.n_shared_maps,
+            pages_shared=self.alloc.n_pages_shared,
+            pages_shared_peak=self._pages_shared_peak,
+            n_reclaimable=(self.prefix_cache.n_reclaimable
+                           if self.prefix_cache else 0),
+            n_cached_pages=(self.prefix_cache.n_cached_pages
+                            if self.prefix_cache else 0),
+            n_evicted=(self.prefix_cache.n_evicted
+                       if self.prefix_cache else 0),
+        )
+
     # ------------------------------------------------------------- steps ---
     def step(self) -> List[TokenEvent]:
         self._events = []
@@ -265,6 +371,7 @@ class Engine:
         self.metrics.n_steps += 1
         self.metrics.step_kinds.append(kind)
         self.metrics.kv_usage_trace.append(self.alloc.usage())
+        self._refresh_cache_stats()
         return self._events
 
     # --- sequential: full-prompt prefill OR decode per step -----------------
@@ -278,6 +385,25 @@ class Engine:
         return "idle"
 
     def _do_full_prefill(self, reqs: List[Request]):
+        """Sequential-mode prefill: cache misses take the classic
+        full-prompt path; cache hits map their shared pages and compute
+        only the uncached suffix through the paged mixed kernel.  Two
+        identical prompts admitted in the same batch both miss (the
+        first's pages are only registered at commit) — the copy is
+        cached for every later request."""
+        if self.prefix_cache is None:
+            self._prefill_full_batch(reqs)
+            return
+        hits, misses = [], []
+        for r in reqs:
+            n_cached = self._map_cached(r)
+            (hits if n_cached else misses).append((r, n_cached))
+        if misses:
+            self._prefill_full_batch([r for r, _ in misses])
+        if hits:
+            self._prefill_suffix_batch(hits)
+
+    def _prefill_full_batch(self, reqs: List[Request]):
         ps = self.serve.page_size
         t0 = self.now()
         S_pad = max(-(-max(len(r.prefill_tokens) for r in reqs) // ps) * ps, ps)
@@ -291,6 +417,7 @@ class Engine:
             m = self.metrics.req(r.rid)
             if m.t_prefill_start is None:
                 m.t_prefill_start = t0
+            self.metrics.n_prefill_tokens += len(toks)
         logits, (k, v) = self._prefill(self.params, jnp.asarray(tokens),
                                        jnp.asarray(lens))
         # commit contiguous KV into allocated pages
@@ -306,7 +433,56 @@ class Engine:
         toks = self._sample_rows(logits, reqs)
         t1 = self.now()
         for i, r in enumerate(reqs):
+            self.cache_insert(r, int(lens[i]))
             self._emit_first_token(r, int(toks[i]), int(lens[i]), t1)
+
+    def _prefill_suffix_batch(self, hits: List[tuple]):
+        """Prefill (request, n_cached) pairs from their first uncached
+        token: hit pages are already mapped into ownership, the suffix
+        chunk attends to them through the paged mixed kernel
+        (``p_start > 0``), and only suffix pages are freshly allocated."""
+        ps = self.serve.page_size
+        t0 = self.now()
+        P = len(hits)
+        suffixes = [r.prefill_tokens[n:] for r, n in hits]
+        C = max(-(-max(len(s) for s in suffixes) // ps) * ps, ps)
+        W = self.serve.max_pages_per_seq + 1   # +1 slack: padded chunk page
+                                               # lookups may peek one past
+        p_tokens = np.zeros((P, C), np.int32)
+        p_start = np.zeros((P,), np.int32)
+        p_lens = np.zeros((P,), np.int32)
+        p_table = np.zeros((P, W), np.int32)
+        for i, (r, n) in enumerate(hits):
+            toks = suffixes[i]
+            m = self.metrics.req(r.rid)
+            if m.t_prefill_start is None:
+                m.t_prefill_start = t0
+            self.alloc.extend_to(r.rid, n + len(toks))
+            self._apply_cow(self.alloc.prepare_write(r.rid, n, len(toks)))
+            bt = self.alloc.owned(r.rid)
+            p_table[i, : len(bt)] = bt
+            p_tokens[i, : len(toks)] = toks
+            p_start[i] = n
+            p_lens[i] = len(toks)
+            self.metrics.n_prefill_tokens += len(toks)
+        mb = dict(
+            p_tokens=jnp.asarray(p_tokens),
+            p_table=jnp.asarray(p_table),
+            p_start=jnp.asarray(p_start),
+            p_lens=jnp.asarray(p_lens),
+            d_tokens=jnp.zeros((0,), jnp.int32),
+            d_table=jnp.zeros((0, W), jnp.int32),
+            d_lens=jnp.zeros((0,), jnp.int32),
+            d_active=jnp.zeros((0,), bool),
+        )
+        p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
+            self.params, mb, self.k_pages, self.v_pages)
+        toks_out = self._sample_rows(p_logits, [r for r, _ in hits])
+        t1 = self.now()
+        for i, (r, n) in enumerate(hits):
+            full_len = n + len(suffixes[i])
+            self.cache_insert(r, full_len)
+            self._emit_first_token(r, int(toks_out[i]), full_len, t1)
 
     def _emit_first_token(self, req: Request, tok: int, seq_len: int, t):
         """First token after a (re-)prefill; a resumed request keeps its
@@ -320,7 +496,7 @@ class Engine:
         reason = self._finish_reason(req)
         self._record_event(req, tok, t, reason)
         if reason is not None:
-            self._finish(req, t, reason)
+            self._finish(req, t, reason, n_committed=seq_len)
             return
         free = next((i for i, s in enumerate(self.slots) if s is None), None)
         if free is None:
@@ -343,15 +519,19 @@ class Engine:
             return "length"
         return None
 
-    def _finish(self, req: Request, t, reason: str):
+    def _finish(self, req: Request, t, reason: str, n_committed: int = 0):
         m = self.metrics.req(req.rid)
         m.t_done = t
         m.n_generated = len(req.out_tokens)
         m.finish_reason = reason
+        # register committed KV before freeing: the pages park on the
+        # cache's reclaimable list and keep serving identical prefixes
+        self.cache_insert(req, n_committed)
         self.alloc.free(req.rid)
         self._outputs.append(RequestOutput(
             rid=req.rid, prompt=list(req.prompt), tokens=list(req.out_tokens),
             finish_reason=reason, n_preempted=m.n_preempted,
+            n_cached_tokens=m.n_cached_tokens,
             arrival=m.arrival, token_times=list(m.token_times), t_done=t))
 
     def _record_event(self, req: Request, tok: int, t, reason: Optional[str]):
@@ -375,7 +555,11 @@ class Engine:
                 self.sched.preempt("slot", i, reason="self")
                 continue
             new = self.alloc.extend_to(s.req.rid, s.seq_len + 1)
-            if new:
+            # COW a shared/cached tail page before the decode token's KV
+            # scatters into it (no-op unless the page has other readers)
+            pairs = self.alloc.prepare_write(s.req.rid, s.seq_len)
+            self._apply_cow(pairs)
+            if new or pairs:
                 bt = self.alloc.owned(s.req.rid)
                 self.block_tables[i, : len(bt)] = bt
 
@@ -395,7 +579,12 @@ class Engine:
     def _refill_streams(self):
         for r in self.sched.admit_streams():
             i = self.streams.index(None)
-            self.streams[i] = _Stream(req=r, tokens=r.prefill_tokens)
+            # a cache hit maps shared pages and fast-forwards the stream
+            # past the cached chunks: prefill starts at the first
+            # uncached token (SARATHI-style streams skip cached work)
+            n_cached = self._map_cached(r)
+            self.streams[i] = _Stream(req=r, tokens=r.prefill_tokens,
+                                      pos=n_cached)
             m = self.metrics.req(r.rid)
             if m.t_prefill_start is None:
                 m.t_prefill_start = self.now()
@@ -434,6 +623,7 @@ class Engine:
             if st.pos + n >= len(st.tokens):
                 free_slots -= 1
             self.alloc.extend_to(st.req.rid, st.pos + n + 1)
+            self._apply_cow(self.alloc.prepare_write(st.req.rid, st.pos, n))
             bt = self.alloc.owned(st.req.rid)
             self.stream_tables[i, :] = 0
             self.stream_tables[i, : len(bt)] = bt
@@ -453,6 +643,8 @@ class Engine:
                 if any(r is not None for r in completing) else None)
         for i, st, n in chunks:
             st.pos += n
+            self.metrics.n_prefill_tokens += n
+            self.cache_insert(st.req, st.pos)   # register landed full pages
             if st.pos >= len(st.tokens):
                 self._emit_first_token(st.req, int(toks[i]), len(st.tokens), t)
                 self.streams[i] = None
@@ -550,7 +742,7 @@ class Engine:
             reason = self._finish_reason(s.req)
             self._record_event(s.req, tok, t, reason)
             if reason is not None:
-                self._finish(s.req, t, reason)
+                self._finish(s.req, t, reason, n_committed=s.seq_len)
                 self.slots[i] = None
             else:
                 s.next_token = tok

@@ -5,13 +5,23 @@ the engine; this module owns the allocator + per-request block tables —
 the paper's "mapping between the inference request ... and the generated
 KV-cache file" (§II-G), solved with block tables instead of files.
 
+Pages are **refcounted**: with a :class:`~repro.core.prefix_cache.PrefixCache`
+attached, byte-identical prefixes across requests map to the *same*
+pages (``share``), a cached page whose refcount drops to zero parks on
+the cache's reclaimable list instead of the free list (still serving
+future hits, stripped leaf-first under pressure before the scheduler
+preempts anyone), and ``prepare_write`` copy-on-writes a shared or
+cached page before a token write would mutate it.
+
 Page N-1 is reserved as the trash page (inactive batch slots scatter
 there); it is never allocated.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.prefix_cache import PrefixCache
 
 
 class OutOfPages(Exception):
@@ -22,8 +32,15 @@ class OutOfPages(Exception):
 class PageAllocator:
     n_pages: int
     page_size: int
+    cache: Optional[PrefixCache] = None
+    # scheduler-trace hook: called as event_cb(event, **detail) on reclaim/cow
+    event_cb: Optional[Callable] = None
     _free: List[int] = field(default_factory=list)
     _owned: Dict[int, List[int]] = field(default_factory=dict)  # rid -> pages
+    _ref: Dict[int, int] = field(default_factory=dict)          # page -> refs
+    n_reclaims: int = 0      # cached pages stripped back into the free list
+    n_cow: int = 0           # copy-on-write page splits
+    n_shared_maps: int = 0   # cache-hit pages mapped via share()
 
     def __post_init__(self):
         # last page reserved as trash
@@ -35,28 +52,80 @@ class PageAllocator:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now: the free list plus the cache's
+        reclaimable pool (zero-ref cached pages are stripped on demand)."""
+        return len(self._free) + (self.cache.n_reclaimable if self.cache else 0)
 
     @property
     def n_allocated(self) -> int:
-        return (self.n_pages - 1) - len(self._free)
+        return (self.n_pages - 1) - self.n_free
+
+    @property
+    def n_pages_shared(self) -> int:
+        """Pages currently mapped by more than one request."""
+        return sum(1 for c in self._ref.values() if c > 1)
 
     def usage(self) -> float:
-        """KV-cache usage fraction (the paper's Fig. 5/14/15 metric)."""
+        """KV-cache usage fraction (the paper's Fig. 5/14/15 metric).
+        Reclaimable cached pages count as free: they are reusable capacity."""
         return self.n_allocated / (self.n_pages - 1)
 
     def pages_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def is_referenced(self, page: int) -> bool:
+        """True when the page is mapped by at least one live request.
+        (A reclaimable cache hit is NOT referenced: reviving it consumes
+        free capacity, so admission must budget it like a fresh alloc.)"""
+        return self._ref.get(page, 0) > 0
+
+    def n_exclusive(self, rid: int) -> int:
+        """Pages only ``rid`` references — the capacity that freeing it
+        would actually return (shared pages merely decref)."""
+        return sum(1 for p in self._owned.get(rid, ())
+                   if self._ref.get(p, 0) == 1)
+
     def can_alloc(self, n: int) -> bool:
-        return len(self._free) >= n
+        return self.n_free >= n
+
+    def _event(self, ev: str, **detail) -> None:
+        if self.event_cb is not None:
+            self.event_cb(ev, **detail)
+
+    def _pop_free(self, rid: int) -> int:
+        """Take one page, stripping the reclaimable cache pool if the free
+        list is dry (this — not preemption — is the first pressure valve)."""
+        if not self._free and self.cache is not None:
+            page = self.cache.pop_reclaimable()
+            if page is not None:
+                self.n_reclaims += 1
+                self._event("reclaim", rid=rid, page=page)
+                self._free.append(page)
+        if not self._free:
+            raise OutOfPages(f"need 1, have {self.n_free}")
+        return self._free.pop()
 
     def alloc(self, rid: int, n: int) -> List[int]:
-        if len(self._free) < n:
-            raise OutOfPages(f"need {n}, have {len(self._free)}")
-        pages = [self._free.pop() for _ in range(n)]
+        if self.n_free < n:
+            raise OutOfPages(f"need {n}, have {self.n_free}")
+        pages = [self._pop_free(rid) for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
         self._owned.setdefault(rid, []).extend(pages)
         return pages
+
+    def share(self, rid: int, pages: List[int]) -> None:
+        """Map cache-hit ``pages`` into ``rid``'s table (refcount += 1),
+        reviving any that were parked reclaimable.  Must be called before
+        any further ``alloc`` so a hit can't be reclaimed out from under
+        the request that just matched it."""
+        for p in pages:
+            refs = self._ref.get(p, 0)
+            if refs == 0:
+                self.cache.on_revive(p)
+            self._ref[p] = refs + 1
+        self._owned.setdefault(rid, []).extend(pages)
+        self.n_shared_maps += len(pages)
 
     def extend_to(self, rid: int, n_tokens: int) -> List[int]:
         """Ensure rid owns enough pages for n_tokens; returns new pages."""
@@ -66,10 +135,56 @@ class PageAllocator:
             return []
         return self.alloc(rid, need)
 
+    def prepare_write(self, rid: int, pos: int, n_tokens: int = 1
+                      ) -> List[Tuple[int, int]]:
+        """Copy-on-write every owned page that tokens [pos, pos+n) will
+        scatter into and that is shared (ref > 1) or cached: the writer
+        gets a private copy, the original keeps serving its other
+        readers / future cache hits.  Returns (src, dst) page pairs whose
+        device contents the engine must copy before dispatching.
+
+        On today's engine paths this never fires — cached spans are
+        capped below the first written position — but it is what makes
+        shared pages safe by construction rather than by convention.
+        """
+        pages = self._owned.get(rid, [])
+        ps = self.page_size
+        pairs: List[Tuple[int, int]] = []
+        lo = pos // ps
+        hi = min((pos + n_tokens - 1) // ps, len(pages) - 1)
+        for idx in range(lo, hi + 1):
+            p = pages[idx]
+            if self._ref.get(p, 0) <= 1 and not \
+                    (self.cache is not None and self.cache.is_cached(p)):
+                continue
+            new = self._pop_free(rid)
+            self._ref[new] = 1
+            pages[idx] = new
+            self._release_one(p)
+            pairs.append((p, new))
+            self.n_cow += 1
+            self._event("cow", rid=rid, src=p, dst=new)
+        return pairs
+
     def owned(self, rid: int) -> List[int]:
         return self._owned.get(rid, [])
 
+    def _release_one(self, page: int) -> bool:
+        """Decref; returns True when the page actually left the request's
+        hold on capacity (refcount hit zero)."""
+        self._ref[page] -= 1
+        if self._ref[page] > 0:
+            return False
+        del self._ref[page]
+        if self.cache is not None and self.cache.is_cached(page):
+            self.cache.on_release(page)     # park reclaimable, not free
+        else:
+            self._free.append(page)
+        return True
+
     def free(self, rid: int) -> int:
+        """Release every page ``rid`` maps; returns how many actually
+        became available (shared pages only decref — they stay with
+        their other readers)."""
         pages = self._owned.pop(rid, [])
-        self._free.extend(reversed(pages))
-        return len(pages)
+        return sum(self._release_one(p) for p in reversed(pages))

@@ -18,6 +18,8 @@ class RequestMetrics:
     n_prompt: int = 0
     n_generated: int = 0
     n_preempted: int = 0         # times this request was evicted + requeued
+    n_cached_tokens: int = 0     # prefill tokens served from the prefix cache
+                                 # (summed across preemption resumes)
     finish_reason: Optional[str] = None   # "length" | "stop" once done
 
     @property
@@ -46,6 +48,12 @@ class EngineMetrics:
     t_start: float = 0.0
     t_end: float = 0.0
     n_steps: int = 0
+    # --- prefill accounting (shared-prefix cache) ---
+    n_prefill_tokens: int = 0    # prefill tokens actually computed
+    n_cached_tokens: int = 0     # prefill tokens skipped via cache hits
+    # allocator/cache counters snapshot, refreshed by the engine each step:
+    # {"n_reclaims", "n_cow", "n_shared_maps", "pages_shared", ...}
+    prefix_cache_stats: Dict[str, int] = field(default_factory=dict)
 
     def req(self, rid: int) -> RequestMetrics:
         if rid not in self.requests:
@@ -81,4 +89,14 @@ class EngineMetrics:
             "kv_usage_peak": max(self.kv_usage_trace, default=0.0),
             "kv_usage_mean": (sum(self.kv_usage_trace) / len(self.kv_usage_trace))
                              if self.kv_usage_trace else 0.0,
+            "prefill_tokens_computed": self.n_prefill_tokens,
+            "cached_tokens": self.n_cached_tokens,
+            # fraction of all prefill work served from the prefix cache
+            "cache_hit_rate": (
+                self.n_cached_tokens
+                / max(self.n_cached_tokens + self.n_prefill_tokens, 1)),
+            "pages_shared_peak": self.prefix_cache_stats.get("pages_shared_peak", 0),
+            "n_reclaims": self.prefix_cache_stats.get("n_reclaims", 0),
+            "n_cow": self.prefix_cache_stats.get("n_cow", 0),
+            "prefix_cache": dict(self.prefix_cache_stats),
         }

@@ -31,6 +31,7 @@ class RequestOutput:
     tokens: List[int]
     finish_reason: str            # "length" (budget) | "stop" (eos/stop token)
     n_preempted: int              # times evicted + resumed before finishing
+    n_cached_tokens: int          # prefill tokens served by the prefix cache
     arrival: float
     token_times: List[float] = field(default_factory=list)
     t_done: float = 0.0

@@ -1,0 +1,192 @@
+"""Shared-prefix KV cache: a hash-trie of full pages.
+
+The paper's binding constraint is the KV-cache page pool (Figs. 5/14/15);
+this module stretches it by turning byte-identical token prefixes —
+shared system prompts, few-shot templates, and the ``prompt +
+out_tokens`` replay of a preemption resume — into *shared* refcounted
+pages instead of recomputed private copies.
+
+Structure
+    A trie over *full* pages: each node is keyed by
+    ``(parent_node_id, page_token_tuple)`` and records the pool page
+    holding the KV for exactly those ``page_size`` tokens at those
+    absolute positions.  Chaining from the root makes position alignment
+    inherent (a page's KV embeds its rope positions), and using the
+    parent's node id — not a hash of its tokens — makes lookups exact:
+    no collision can map a request onto the wrong KV.
+
+Lifecycle (driven by :class:`~repro.core.kv_cache.PageAllocator`)
+    * ``insert`` registers a request's committed full pages after a
+      prefill chunk lands, and again at finish/preemption (so a resumed
+      victim re-hits its own just-freed pages).
+    * ``match`` returns the longest cached full-page prefix for a token
+      list; the allocator then ``share``s those pages (refcount += 1).
+    * When a page's refcount drops to zero it is *not* returned to the
+      free list: it parks here as **reclaimable**, still serving future
+      hits.  Under pressure the allocator strips reclaimable pages
+      (leaf-first, LRU or FIFO per ``prefix_cache_policy``) *before* the
+      scheduler resorts to preempting live requests.
+
+Only full pages are cached, and a request's cached span is capped below
+its full prefill length (at least one token is always recomputed so the
+engine has last-token logits to sample from).  Writes therefore never
+land in shared pages on today's engine paths; the allocator's
+copy-on-write (``prepare_write``) is the safety net that keeps that an
+invariant rather than an assumption.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+PREFIX_CACHE_POLICIES = ("lru", "fifo")
+
+_ROOT = 0          # parent id of first-page nodes
+
+
+class _Node:
+    __slots__ = ("nid", "key", "page", "parent", "n_children", "last_used",
+                 "reclaimable")
+
+    def __init__(self, nid: int, key, page: int, parent: Optional["_Node"]):
+        self.nid = nid
+        self.key = key                  # (parent_nid, page_token_tuple)
+        self.page = page
+        self.parent = parent
+        self.n_children = 0
+        self.last_used = 0
+        self.reclaimable = False
+
+
+class PrefixCache:
+    """Page-granular prefix trie with a reclaimable (zero-ref) pool."""
+
+    def __init__(self, page_size: int, policy: str = "lru"):
+        if policy not in PREFIX_CACHE_POLICIES:
+            raise ValueError(
+                f"unknown prefix_cache_policy {policy!r}; expected one of "
+                f"{', '.join(PREFIX_CACHE_POLICIES)}")
+        self.page_size = page_size
+        self.policy = policy
+        self._nodes: Dict[Tuple[int, Tuple[int, ...]], _Node] = {}
+        self._by_page: Dict[int, _Node] = {}
+        self._reclaimable: Dict[int, _Node] = {}    # page -> node, ref == 0
+        self._tick = 0
+        self._next_nid = _ROOT + 1
+        self.n_evicted = 0   # reclaimed/evicted nodes (engine stats)
+
+    # ------------------------------------------------------------ lookup ---
+    def _chunks(self, tokens: List[int]):
+        ps = self.page_size
+        for i in range(len(tokens) // ps):
+            yield tuple(tokens[i * ps: (i + 1) * ps])
+
+    def match(self, tokens: List[int]) -> List[int]:
+        """Pages holding the longest cached full-page prefix of ``tokens``.
+
+        Pure lookup — no refcounts or LRU state change (callers map the
+        pages through ``PageAllocator.share`` and then :meth:`touch`).
+        """
+        pages: List[int] = []
+        parent = _ROOT
+        for chunk in self._chunks(tokens):
+            node = self._nodes.get((parent, chunk))
+            if node is None:
+                break
+            pages.append(node.page)
+            parent = node.nid
+        return pages
+
+    def touch(self, pages: List[int]) -> None:
+        """LRU-bump the nodes behind freshly mapped hit pages."""
+        self._tick += 1
+        for p in pages:
+            node = self._by_page.get(p)
+            if node is not None:
+                node.last_used = self._tick
+
+    # ------------------------------------------------------------ insert ---
+    def insert(self, tokens: List[int], pages: List[int]) -> int:
+        """Register ``pages`` as holding the KV of ``tokens`` (full pages
+        only: ``len(tokens) == len(pages) * page_size``; callers trim the
+        partial tail).  Existing nodes win — a duplicate prefix computed
+        privately by a concurrent request is simply not registered (its
+        pages free normally).  Returns the number of newly cached pages.
+        """
+        assert len(tokens) == len(pages) * self.page_size, \
+            (len(tokens), len(pages), self.page_size)
+        self._tick += 1
+        new = 0
+        parent: Optional[_Node] = None
+        parent_id = _ROOT
+        for i, chunk in enumerate(self._chunks(tokens)):
+            key = (parent_id, chunk)
+            node = self._nodes.get(key)
+            if node is None:
+                page = pages[i]
+                if page in self._by_page:
+                    # page already caches other content (stale alias from a
+                    # racing insert) — never double-register a page
+                    break
+                node = _Node(self._next_nid, key, page, parent)
+                self._next_nid += 1
+                self._nodes[key] = node
+                self._by_page[page] = node
+                if parent is not None:
+                    parent.n_children += 1
+                new += 1
+            node.last_used = self._tick
+            parent, parent_id = node, node.nid
+        return new
+
+    # --------------------------------------------------- reclaimable pool --
+    def is_cached(self, page: int) -> bool:
+        return page in self._by_page
+
+    @property
+    def n_cached_pages(self) -> int:
+        return len(self._by_page)
+
+    @property
+    def n_reclaimable(self) -> int:
+        return len(self._reclaimable)
+
+    def on_release(self, page: int) -> None:
+        """Called by the allocator when a cached page's refcount hits 0:
+        park it as reclaimable instead of returning it to the free list."""
+        node = self._by_page[page]
+        node.reclaimable = True
+        self._reclaimable[page] = node
+
+    def on_revive(self, page: int) -> None:
+        """A reclaimable page was re-shared (refcount 0 -> 1)."""
+        node = self._reclaimable.pop(page)
+        node.reclaimable = False
+
+    def pop_reclaimable(self) -> Optional[int]:
+        """Evict the best zero-ref *leaf* (no cached children) and return
+        its page to the caller.  Leaf-first keeps every remaining chain
+        intact; since a referenced child implies a referenced parent
+        (requests map whole prefix chains), every reclaimable page is
+        eventually poppable this way.
+        """
+        def rank(node: _Node) -> int:
+            return node.last_used if self.policy == "lru" else node.nid
+
+        best: Optional[_Node] = None
+        for node in self._reclaimable.values():
+            if node.n_children:
+                continue
+            if best is None or rank(node) < rank(best):
+                best = node
+        if best is None:
+            return None
+        self._evict(best)
+        return best.page
+
+    def _evict(self, node: _Node) -> None:
+        del self._nodes[node.key]
+        del self._by_page[node.page]
+        self._reclaimable.pop(node.page, None)
+        if node.parent is not None:
+            node.parent.n_children -= 1
+        self.n_evicted += 1

@@ -77,16 +77,24 @@ class Scheduler:
     def watermark_pages(self) -> int:
         return int(math.ceil(self.serve.watermark * (self.alloc.n_pages - 1)))
 
-    def admission_pages(self, req) -> int:
+    def admission_pages(self, req, free_cached: int = 0) -> int:
         """Pages to budget for admitting `req`: prompt (plus any tokens
         generated before a preemption) + 1, plus `decode_reserve` of the
         remaining generation as decode headroom.  The generation budget
         is per-request (``req.sampling.max_new_tokens``), so a mixed
-        queue of short and long requests is budgeted request by request."""
+        queue of short and long requests is budgeted request by request.
+
+        With the prefix cache enabled, only the *miss* pages are
+        budgeted: ``free_cached`` (live-referenced hit pages, from
+        ``Engine.cache_probe``) don't come out of the free pool, while
+        reclaimable hits are charged like fresh allocs — reviving them
+        consumes free capacity.
+        """
         remaining = max(req.sampling.max_new_tokens - len(req.out_tokens), 1)
         headroom = int(self.serve.decode_reserve * (remaining - 1))
         n_prefill = len(req.prompt) + len(req.out_tokens)
-        return self.alloc.pages_needed(n_prefill + 1 + headroom)
+        need = self.alloc.pages_needed(n_prefill + 1 + headroom)
+        return max(need - free_cached, 0)
 
     def _bare_pages(self, req) -> int:
         """Minimum pages the request needs to start; raises if the pool
@@ -114,13 +122,14 @@ class Scheduler:
         wait forever behind its own reservation)."""
         r = self.waiting[0]
         bare = self._bare_pages(r)      # raises when it can never fit
-        need = self.admission_pages(r)
+        n_hit, n_free_hit = self.eng.cache_probe(r)   # one trie walk
+        need = self.admission_pages(r, n_free_hit)
         if need > budget:
             if not (first and self.alloc.n_allocated == 0):
                 return None, budget
             need = bare
         self.waiting.popleft()
-        self._event("admit", r.rid, pages=need,
+        self._event("admit", r.rid, pages=need, cached_pages=n_hit,
                     resumed=bool(r.out_tokens))
         return r, budget - need
 
@@ -185,8 +194,9 @@ class Scheduler:
             for i, s in enumerate(cont):
                 if s is None or s.req.rid in protect:
                     continue
-                if not self.alloc.owned(s.req.rid):
-                    continue     # evicting a page-less victim frees nothing
+                if not self.alloc.n_exclusive(s.req.rid):
+                    continue     # page-less, or every page shared with a
+                                 # live reader: evicting frees nothing
                 key = (s.req.arrival, s.req.rid)
                 if key <= (needy.arrival, needy.rid):
                     continue
@@ -202,6 +212,12 @@ class Scheduler:
         victim = cont[index]
         cont[index] = None
         r = victim.req
+        # register the victim's committed KV with the prefix cache BEFORE
+        # freeing: its pages park reclaimable and the resume re-hits them
+        # (recomputation becomes a cheap remap unless pressure reclaimed
+        # them in the meantime)
+        committed = victim.seq_len if kind == "slot" else victim.pos
+        self.eng.cache_insert(r, committed)
         freed = self.alloc.free(r.rid)
         self.requeue(r)
         self.metrics.req(r.rid).n_preempted += 1

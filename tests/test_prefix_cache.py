@@ -1,0 +1,300 @@
+"""Shared-prefix KV cache: refcounted copy-on-write page sharing.
+
+The contract under test: with ``enable_prefix_cache=True`` the engine
+produces *bit-identical* greedy token streams in every mode while doing
+strictly less prefill work on shared prompts, preempted requests resume
+by remapping their own just-freed pages, and pressure strips reclaimable
+cached pages before anyone is preempted.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import ServeConfig
+from repro.core.engine import Engine, Request, SamplingParams
+from repro.core.kv_cache import PageAllocator
+from repro.core.prefix_cache import PrefixCache
+
+ARCH = "qwen3-0.6b"
+MODES = ["sequential", "splitwiser", "splitwiser_mps"]
+PS = 4
+BASE = ServeConfig(max_batch=4, page_size=PS, n_pages=128,
+                   max_pages_per_seq=16, prefill_chunk=PS, n_streams=2,
+                   enable_prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _shared_prefix_requests(vocab, n=6, sys_tokens=24, tail=4, out=8, seed=0):
+    rng = np.random.RandomState(seed)
+    system = list(rng.randint(2, vocab, size=sys_tokens))
+    return [Request(rid=i,
+                    prompt=system + list(rng.randint(2, vocab, size=tail)),
+                    sampling=SamplingParams(max_new_tokens=out))
+            for i in range(n)]
+
+
+def _run(model, params, serve, reqs):
+    eng = Engine(model, params, serve)
+    m = eng.run(reqs, max_steps=8000)
+    return eng, m.summary()
+
+
+# ------------------------------------------------- engine-level behavior ---
+@pytest.mark.parametrize("mode", MODES)
+def test_greedy_bit_identical_cache_on_off(setup, mode):
+    """The cache must be a pure optimization: same tokens, less work."""
+    model, params = setup
+    outs, summaries = {}, {}
+    for cache in (False, True):
+        serve = dataclasses.replace(BASE, mode=mode,
+                                    enable_prefix_cache=cache)
+        reqs = _shared_prefix_requests(model.cfg.vocab_size)
+        _, s = _run(model, params, serve, reqs)
+        assert s["n_done"] == len(reqs)
+        outs[cache] = [r.out_tokens for r in reqs]
+        summaries[cache] = s
+    assert outs[True] == outs[False]
+    assert summaries[True]["cache_hit_rate"] > 0
+    assert summaries[False]["cache_hit_rate"] == 0
+    assert (summaries[True]["prefill_tokens_computed"]
+            < summaries[False]["prefill_tokens_computed"])
+    assert summaries[True]["pages_shared_peak"] > 0
+
+
+def test_disjoint_prompts_never_hit(setup):
+    """Unrelated prompts must not alias: zero hits, zero shared pages."""
+    model, params = setup
+    rng = np.random.RandomState(7)
+    reqs = [Request(rid=i,
+                    prompt=list(rng.randint(2, model.cfg.vocab_size, size=20)),
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(4)]
+    eng, s = _run(model, params,
+                  dataclasses.replace(BASE, mode="splitwiser_mps"), reqs)
+    assert s["n_done"] == 4
+    assert s["cache_hit_rate"] == 0
+    assert s["cached_tokens"] == 0
+    assert s["pages_shared_peak"] == 0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cow_divergence_after_shared_prefix(setup, mode):
+    """Requests sharing a prefix but with different tails must write their
+    divergent KV into private pages — outputs match the independent
+    (cache-off, generous-pool) runs exactly while prefix pages are shared."""
+    model, params = setup
+    reqs = _shared_prefix_requests(model.cfg.vocab_size, n=6, tail=6)
+    serve = dataclasses.replace(BASE, mode=mode)
+    eng, s = _run(model, params, serve, reqs)
+    ref = _shared_prefix_requests(model.cfg.vocab_size, n=6, tail=6)
+    _, _ = _run(model, params,
+                dataclasses.replace(BASE, mode=mode,
+                                    enable_prefix_cache=False), ref)
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in ref]
+    assert s["pages_shared_peak"] > 0        # prefix pages really were shared
+    # every request generated distinct continuations from the shared prefix
+    assert len({tuple(r.prompt + r.out_tokens) for r in reqs}) == len(reqs)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_preempted_resume_remaps_own_pages(setup, mode):
+    """A preempted victim's pages park in the cache; its resume must re-hit
+    them (remap, not recompute) and still produce oracle-exact greedy."""
+    model, params = setup
+    rng = np.random.RandomState(0)
+    prompts = [list(rng.randint(2, model.cfg.vocab_size, size=n))
+               for n in (12, 11, 12, 10)]
+
+    def reqs():
+        return [Request(rid=i, prompt=list(p),
+                        sampling=SamplingParams(max_new_tokens=16))
+                for i, p in enumerate(prompts)]
+
+    oracle = reqs()
+    _run(model, params, dataclasses.replace(
+        BASE, mode="sequential", enable_prefix_cache=False), oracle)
+
+    small = dataclasses.replace(BASE, mode=mode, n_pages=20,
+                                max_pages_per_seq=12)
+    eng = Engine(model, params, small)
+    rs = reqs()
+    m = eng.run(rs, max_steps=8000)
+    s = m.summary()
+    assert s["n_done"] == 4
+    assert s["n_preemptions"] > 0
+    assert [r.out_tokens for r in rs] == [r.out_tokens for r in oracle]
+    # at least one resumed request re-hit its own just-freed pages
+    resumed = [m.requests[r.rid] for r in rs if m.requests[r.rid].n_preempted]
+    assert any(r.n_cached_tokens > 0 for r in resumed)
+    resumed_admits = [e for e in m.sched_events
+                     if e["event"] == "admit" and e.get("resumed")]
+    assert any(e.get("cached_pages", 0) > 0 for e in resumed_admits)
+    assert eng.alloc.n_allocated == 0 and eng.idle()
+
+
+def test_reclaim_strips_cache_before_preemption(setup):
+    """Zero-ref cached pages are the first pressure valve: a workload that
+    fits only because finished requests' pages are reclaimed must complete
+    with reclaim events and WITHOUT preempting anyone."""
+    model, params = setup
+    rng = np.random.RandomState(3)
+    vocab = model.cfg.vocab_size
+    # pool of 15 usable pages; each request needs ceil((16+1+2)/4) = 5
+    serve = dataclasses.replace(BASE, mode="sequential", n_pages=16,
+                                max_batch=1, decode_reserve=0.5)
+    eng = Engine(model, params, serve)
+    # sequential single-slot: requests run one after another; each leaves
+    # its pages parked reclaimable, which later disjoint requests strip
+    reqs = [Request(rid=i, prompt=list(rng.randint(2, vocab, size=16)),
+                    sampling=SamplingParams(max_new_tokens=4))
+            for i in range(6)]
+    m = eng.run(reqs, max_steps=8000)
+    s = m.summary()
+    assert s["n_done"] == 6
+    assert s["n_preemptions"] == 0
+    assert s["n_reclaims"] > 0
+    assert any(e["event"] == "reclaim" for e in m.sched_events)
+
+
+def test_request_output_reports_cached_tokens(setup):
+    model, params = setup
+    serve = dataclasses.replace(BASE, mode="splitwiser_mps")
+    eng = Engine(model, params, serve)
+    reqs = _shared_prefix_requests(model.cfg.vocab_size, n=4)
+    eng.run(reqs, max_steps=8000)
+    outs = {o.rid: o for o in eng.poll()}
+    assert len(outs) == 4
+    assert any(o.n_cached_tokens > 0 for o in outs.values())
+
+
+# -------------------------------------------------------- allocator units --
+def _alloc(n_pages=16, ps=4, policy="lru"):
+    cache = PrefixCache(ps, policy=policy)
+    return PageAllocator(n_pages, ps, cache=cache), cache
+
+
+def test_refcounted_share_and_release():
+    alloc, cache = _alloc()
+    pages = alloc.alloc(1, 3)
+    cache.insert(list(range(12)), pages)
+    alloc.share(2, pages)
+    assert alloc.n_pages_shared == 3
+    assert alloc.n_exclusive(1) == 0      # every page shared with rid 2
+    # still referenced by rid 2: nothing actually freed, nothing reclaimable
+    assert alloc.free(1) == 0
+    assert cache.n_reclaimable == 0 and alloc.n_pages_shared == 0
+    assert alloc.n_exclusive(2) == 3
+    alloc.free(2)
+    # now zero-ref but cached: parked reclaimable, still counted free
+    assert cache.n_reclaimable == 3
+    assert alloc.n_free == 15 and alloc.n_allocated == 0
+
+
+def test_match_revives_reclaimable_and_reclaim_evicts_lru_leaf():
+    alloc, cache = _alloc(n_pages=8, ps=4)
+    a = alloc.alloc(1, 2)
+    cache.insert(list(range(8)), a)
+    alloc.free(1)
+    assert cache.n_reclaimable == 2
+    # match + share revives the chain (ref 0 -> 1)
+    hit = cache.match(list(range(8)) + [99])
+    assert hit == a
+    alloc.share(2, hit)
+    assert cache.n_reclaimable == 0
+    alloc.free(2)
+    # exhaust the free list; next alloc must strip reclaimable pages
+    free_left = len(alloc._free)
+    alloc.alloc(3, free_left)
+    assert alloc.n_reclaims == 0
+    alloc.alloc(3, 1)
+    assert alloc.n_reclaims == 1
+    # the LRU *leaf* (deepest chain node) went first: the surviving node
+    # still matches the first page of the prefix
+    assert cache.match(list(range(8))) == a[:1]
+
+
+def test_fifo_policy_and_validation():
+    with pytest.raises(ValueError, match="prefix_cache_policy"):
+        PrefixCache(4, policy="mru")
+    with pytest.raises(ValueError, match="prefix_cache_policy"):
+        ServeConfig(enable_prefix_cache=True, prefix_cache_policy="bad")
+    alloc, cache = _alloc(n_pages=12, ps=4, policy="fifo")
+    a = alloc.alloc(1, 1)
+    cache.insert(list(range(4)), a)
+    b = alloc.alloc(2, 1)
+    cache.insert(list(range(100, 104)), b)
+    alloc.free(1)
+    alloc.free(2)
+    cache.touch(a)     # LRU would now evict b first; FIFO still evicts a
+    assert cache.pop_reclaimable() == a[0]
+
+
+def test_cow_splits_shared_tail_page():
+    """prepare_write on a shared page gives the writer a private copy and
+    leaves the original with the other reader (and the cache)."""
+    alloc, cache = _alloc()
+    pages = alloc.alloc(1, 2)
+    cache.insert(list(range(8)), pages)
+    alloc.share(2, pages)
+    # rid 2 is about to write into its tail page (position 5 -> page 1)
+    pairs = alloc.prepare_write(2, 5)
+    assert len(pairs) == 1
+    src, dst = pairs[0]
+    assert src == pages[1] and dst not in pages
+    assert alloc.owned(2) == [pages[0], dst]
+    assert alloc.owned(1) == pages            # reader untouched
+    assert cache.is_cached(src) and not cache.is_cached(dst)
+    # a second write to the now-private page is a no-op... rid 1 still
+    # shares page 0 with rid 2, so writing THERE would split again
+    assert alloc.prepare_write(2, 6) == []
+    assert len(alloc.prepare_write(2, 1)) == 1
+
+
+def test_cow_on_cached_exclusive_page_preserves_cache_content():
+    """Even with a single reference, a *cached* page must not be written
+    in place — the cache's copy would silently diverge from its key."""
+    alloc, cache = _alloc()
+    pages = alloc.alloc(1, 1)
+    cache.insert(list(range(4)), pages)
+    pairs = alloc.prepare_write(1, 2)
+    assert len(pairs) == 1
+    src, dst = pairs[0]
+    assert src == pages[0]
+    assert cache.is_cached(src)
+    # the original parked reclaimable (zero-ref, cached)
+    assert cache.n_reclaimable == 1
+    assert alloc.owned(1) == [dst]
+
+
+# ------------------------------------------------------------ trie units ---
+def test_trie_partial_pages_never_cached():
+    cache = PrefixCache(4)
+    alloc = PageAllocator(16, 4, cache=cache)
+    pages = alloc.alloc(1, 2)
+    # 6 tokens = 1 full page + a partial tail: only the full page may be
+    # inserted (callers trim; the trie enforces the invariant)
+    with pytest.raises(AssertionError):
+        cache.insert(list(range(6)), pages)
+    cache.insert(list(range(4)), pages[:1])
+    assert cache.match(list(range(6))) == pages[:1]
+    assert cache.match([9, 9, 9, 9]) == []
+
+
+def test_trie_duplicate_insert_keeps_first_pages():
+    cache = PrefixCache(2)
+    assert cache.insert([1, 2, 3, 4], [10, 11]) == 2
+    # a concurrent private recompute of the same prefix: not re-registered
+    assert cache.insert([1, 2, 3, 4], [12, 13]) == 0
+    assert cache.match([1, 2, 3, 4]) == [10, 11]
+    # diverging second page chains a sibling under the shared first node
+    assert cache.insert([1, 2, 7, 8], [14, 15]) == 1
+    assert cache.match([1, 2, 7, 8]) == [10, 15]
