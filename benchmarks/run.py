@@ -1,9 +1,12 @@
 """Benchmark driver — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+    PYTHONPATH=src python -m benchmarks.run [--only fig10] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows plus a validation block that
 checks the paper's headline claims directionally (see EXPERIMENTS.md).
+``--json PATH`` additionally writes the rows and check results as
+machine-readable JSON (per-scenario throughput/TTFT/TBT/cache stats) so
+perf trajectories can be recorded as ``BENCH_*.json``.
 """
 import argparse
 import json
@@ -14,11 +17,13 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + validation results as JSON")
     args, _ = ap.parse_known_args()
 
     from benchmarks import batching, kv_usage, open_loop, phase_intensity
-    from benchmarks import pressure, shared_prefix, splitwiser_hf
-    from benchmarks import splitwiser_vllm
+    from benchmarks import policy_sweep, pressure, shared_prefix
+    from benchmarks import splitwiser_hf, splitwiser_vllm
 
     suites = [
         ("phase_intensity", phase_intensity.rows),   # Figs 2-4
@@ -29,6 +34,7 @@ def main() -> None:
         ("pressure", pressure.rows),                 # beyond-paper: KV pressure
         ("open_loop", open_loop.rows),               # beyond-paper: Poisson arrivals
         ("shared_prefix", shared_prefix.rows),       # beyond-paper: prefix cache
+        ("policy_sweep", policy_sweep.rows),         # beyond-paper: policy matrix
     ]
     all_rows = []
     print("name,us_per_call,derived")
@@ -44,9 +50,9 @@ def main() -> None:
             print(f"{r['bench']}[{r['x']}],{dt_us:.0f},"
                   f"\"{json.dumps(derived, default=str)}\"")
 
+    checks = []
     # ---- validation vs the paper's claims (directional) ----
     if not args.only:
-        checks = []
 
         def by(b):
             return [r for r in all_rows if r["bench"] == b]
@@ -114,13 +120,38 @@ def main() -> None:
             checks.append(("MPx2 (time-sliced halves) does NOT beat MPS "
                            "(paper: MPx2 < SP < MPSx2)",
                            big["mp2_speedup"] <= big["mps_speedup"]))
+        pw = by("policy_sweep_delta")
+        if pw:
+            checks.append(("cache_aware admission strictly raises hit rate "
+                           "over fcfs on the Zipf-skewed workload (twins no "
+                           "longer double-miss) for every eviction x preempt",
+                           all(r["hit_rate_cache_aware"] > r["hit_rate_fcfs"]
+                               for r in pw)))
+            checks.append(("greedy token streams bit-identical across the "
+                           "whole policy matrix",
+                           all(r["tokens_match"] for r in pw)))
+            checks.append(("every policy combination completes every request "
+                           "under page pressure with reclaims",
+                           all(r["n_done"] == r["n_requests"]
+                               and r["n_reclaims"] > 0
+                               for r in by("policy_sweep"))))
         print("\n== paper-claim validation ==")
-        ok = True
-        for msg, passed in checks:
-            print(f"[{'PASS' if passed else 'FAIL'}] {msg}")
-            ok &= bool(passed)
-        if not ok:
-            sys.exit(1)
+    ok = True
+    for msg, passed in checks:
+        print(f"[{'PASS' if passed else 'FAIL'}] {msg}")
+        ok &= bool(passed)
+    if args.json:
+        with open(args.json, "w") as f:
+            # ok is null when validation didn't run (--only): a partial
+            # run must not be machine-readable as "all claims passed"
+            json.dump({"rows": all_rows,
+                       "checks": [{"msg": m, "passed": bool(p)}
+                                  for m, p in checks],
+                       "ok": bool(ok) if checks else None},
+                      f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -145,16 +145,32 @@ class ServeConfig:
     max_seq_len: int = 1024
     prefill_chunk: int = 128     # chunked-prefill chunk size in mixed mode
     n_streams: int = 2           # parallel prompt-processing streams (paper's #processes)
-    # --- scheduler: admission + preemption under KV pressure ---
+    # --- scheduler: pluggable policies (core/policies.py) ---
     watermark: float = 0.01      # fraction of the page pool kept free at admission
     decode_reserve: float = 0.5  # fraction of remaining max_new_tokens reserved
                                  # as decode headroom when admitting a request
+    admission_policy: str = "fcfs"  # fcfs: arrival order (seed behaviour)
+                                    # cache_aware: co-schedule resident
+                                    #   prefixes, hold twins of in-flight
+                                    #   prefills one round so they hit
+    eviction_policy: Optional[str] = None  # reclaimable prefix-page strip
+                                    # order: lru | fifo | cost (recompute-
+                                    # FLOPs model); None inherits
+                                    # prefix_cache_policy
     preempt_policy: str = "latest"  # latest: evict latest-arrival + recompute
+                                    # cache_aware: prefer victims whose
+                                    #   committed KV survives eviction
+                                    #   (resume = remap), tie-break latest
                                     # none:   seed behaviour (OutOfPages crash)
+    # scheduler-event trace ring size (EngineMetrics.sched_events); oldest
+    # events beyond the cap are dropped and counted.  Kept in sync with
+    # metrics.DEFAULT_SCHED_EVENTS_CAP (configs stay import-free of core
+    # at module load)
+    sched_events_cap: int = 16384
     # --- shared-prefix KV cache (core/prefix_cache.py) ---
     enable_prefix_cache: bool = False   # refcounted copy-on-write page sharing
-    prefix_cache_policy: str = "lru"    # reclaimable-page eviction order:
-                                        # lru (last hit) | fifo (insertion)
+    prefix_cache_policy: str = "lru"    # legacy alias for eviction_policy
+                                        # (lru | fifo | cost)
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
@@ -162,11 +178,32 @@ class ServeConfig:
                 f"unknown serve mode {self.mode!r}; supported modes: "
                 f"{', '.join(SERVE_MODES)}")
         # imported here to keep configs free of core deps at module load
-        from repro.core.prefix_cache import PREFIX_CACHE_POLICIES
-        if self.prefix_cache_policy not in PREFIX_CACHE_POLICIES:
+        from repro.core.policies import (ADMISSION_POLICIES,
+                                         EVICTION_POLICIES, PREEMPT_POLICIES)
+        if self.admission_policy not in ADMISSION_POLICIES:
             raise ValueError(
-                f"unknown prefix_cache_policy {self.prefix_cache_policy!r}; "
-                f"supported: {', '.join(PREFIX_CACHE_POLICIES)}")
+                f"unknown admission_policy {self.admission_policy!r}; "
+                f"supported: {', '.join(sorted(ADMISSION_POLICIES))}")
+        for knob, value in (("eviction_policy", self.eviction_policy),
+                            ("prefix_cache_policy", self.prefix_cache_policy)):
+            if value is not None and value not in EVICTION_POLICIES:
+                raise ValueError(
+                    f"unknown {knob} {value!r}; "
+                    f"supported: {', '.join(sorted(EVICTION_POLICIES))}")
+        if self.preempt_policy not in PREEMPT_POLICIES and \
+                self.preempt_policy != "none":
+            raise ValueError(
+                f"unknown preempt_policy {self.preempt_policy!r}; supported: "
+                f"{', '.join(sorted(PREEMPT_POLICIES))}, none")
+        if self.sched_events_cap <= 0:
+            raise ValueError(
+                f"sched_events_cap must be positive, got {self.sched_events_cap}")
+
+    @property
+    def resolved_eviction_policy(self) -> str:
+        """The effective reclaimable-page strip order: ``eviction_policy``
+        when set, else the legacy ``prefix_cache_policy`` knob."""
+        return self.eviction_policy or self.prefix_cache_policy
 
 
 @dataclass(frozen=True)

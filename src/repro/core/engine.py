@@ -45,6 +45,18 @@ starts at the first uncached token — ``sequential`` computes only the
 suffix through the paged mixed kernel, the splitwiser modes fast-forward
 their streams past cached chunks, and preempted victims resume by
 remapping their own just-freed pages.
+
+Scheduling decisions — admission order, reclaimable-page eviction,
+preemption victim choice — are pluggable policies (``core/policies.py``,
+selected by ``ServeConfig.admission_policy`` / ``eviction_policy`` /
+``preempt_policy``).  The engine supplies the policy inputs: an
+*in-flight prefix registry* (``register_inflight`` — which prefills are
+about to insert cache pages, so ``cache_aware`` admission can hold an
+identical waiting prompt one round instead of double-missing), the
+``cache_probe`` trie walk, and ``resume_safe_pages`` (how much of a
+victim's committed KV would survive its own eviction).  Policies change
+*when* work happens, never *what* is computed: token streams are
+bit-identical across every policy combination.
 """
 from __future__ import annotations
 
@@ -59,7 +71,7 @@ import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
-from repro.core.metrics import EngineMetrics
+from repro.core.metrics import EngineMetrics, EventRing
 from repro.core.outputs import RequestOutput, TokenEvent
 from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SamplingParams, greedy_tokens, sample_tokens
@@ -141,14 +153,20 @@ class Engine:
         self.serve = serve
         self.params = params
         self.now = _Clock(time_fn)
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(
+            sched_events=EventRing(serve.sched_events_cap))
         self.prefix_cache = (
-            PrefixCache(serve.page_size, policy=serve.prefix_cache_policy)
+            PrefixCache(serve.page_size,
+                        policy=serve.resolved_eviction_policy)
             if serve.enable_prefix_cache else None)
         self.alloc = PageAllocator(serve.n_pages, serve.page_size,
                                    cache=self.prefix_cache,
                                    event_cb=self._alloc_event)
         self._pages_shared_peak = 0
+        # rid -> prefill tokens of admitted-but-not-yet-committed prefills;
+        # cache_aware admission holds identical waiting prompts one round
+        # so they hit the pages these are about to insert
+        self._inflight: dict = {}
         self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
         self.slots: List[Optional[_Slot]] = [None] * serve.max_batch
         self.block_tables = np.zeros((serve.max_batch, serve.max_pages_per_seq),
@@ -265,8 +283,66 @@ class Engine:
     # ------------------------------------------------------ prefix cache ---
     def _alloc_event(self, event: str, **detail):
         """Allocator trace hook (reclaim / cow) into the scheduler trace."""
+        if event == "reclaim" and self.prefix_cache is not None and \
+                self.prefix_cache.policy == "cost":
+            self.metrics.bump("cost_evictions")
+            self.metrics.bump("cost_flops_evicted", detail.get("cost", 0.0))
         self.metrics.sched_events.append(
             {"t": self.now(), "event": event, **detail})
+
+    # ------------------------------------------------------ policy inputs ---
+    def register_inflight(self, req: Request) -> None:
+        """Record an admitted prefill as in flight: its full pages will
+        land in the prefix cache as chunks commit.  The registry is what
+        lets ``cache_aware`` admission hold an identical waiting prompt
+        one round (hit) instead of admitting it alongside its twin
+        (double miss).  Entries are removed at prefill completion
+        (``_emit_first_token``) and at preemption, so a held request is
+        never stranded behind a prefill that stopped."""
+        if self.prefix_cache is not None:
+            self._inflight[req.rid] = req.prefill_tokens
+
+    def unregister_inflight(self, rid: int) -> None:
+        self._inflight.pop(rid, None)
+
+    def inflight_hit_pages(self, req: Request) -> int:
+        """Best full-page prefix coverage of ``req``'s prefill that some
+        in-flight prefill will have inserted once it commits (capped one
+        token below the prefill length, like ``_cache_match``)."""
+        if self.prefix_cache is None or not self._inflight:
+            return 0
+        toks = req.prefill_tokens
+        ps = self.serve.page_size
+        cap = (len(toks) - 1) // ps
+        best = 0
+        for other in self._inflight.values():
+            lim = min(cap, len(other) // ps)
+            n = 0
+            while (n < lim and
+                   toks[n * ps:(n + 1) * ps] == other[n * ps:(n + 1) * ps]):
+                n += 1
+            best = max(best, n)
+        return best
+
+    def resume_safe_pages(self, req: Request, committed: int) -> int:
+        """Full pages of ``req``'s first ``committed`` tokens that would
+        survive its own eviction: cached trie pages referenced by at
+        least one OTHER live request.  Those keep serving hits after the
+        victim's refcounts drop, so its resume remaps them instead of
+        recomputing — the ``cache_aware`` PreemptPolicy's score.
+
+        No ``_cache_match``-style cap is needed here: a victim's resume
+        prefill is always at least one token longer than ``committed``
+        (a slot's last generated token is in ``out_tokens`` but not in
+        ``seq_len``; a stream's ``pos`` is short of its tokens), so the
+        resume-side cap never truncates these committed full pages."""
+        if self.prefix_cache is None:
+            return 0
+        toks = (req.prompt + req.out_tokens)[:committed]
+        pages = self.prefix_cache.match(toks)
+        owned = set(self.alloc.owned(req.rid))
+        return sum(1 for p in pages
+                   if self.alloc.ref_count(p) >= (2 if p in owned else 1))
 
     def _cache_match(self, tokens: List[int]):
         """(n_cached_tokens, hit_pages) for ``tokens``.
@@ -355,7 +431,7 @@ class Engine:
     def step(self) -> List[TokenEvent]:
         self._events = []
         mode = self.serve.mode
-        n_ev = len(self.metrics.sched_events)
+        n_pre = self.metrics.n_preempt_events
         if mode == "sequential":
             kind = self._step_sequential()
         elif mode == "splitwiser":
@@ -364,9 +440,7 @@ class Engine:
             kind = self._step_fused()
         else:   # unreachable: ServeConfig.__post_init__ validates mode
             raise AssertionError(mode)
-        if kind == "idle" and any(
-                e["event"] == "preempt"
-                for e in self.metrics.sched_events[n_ev:]):
+        if kind == "idle" and self.metrics.n_preempt_events > n_pre:
             kind = "preempt"    # nothing dispatched, but evictions happened
         self.metrics.n_steps += 1
         self.metrics.step_kinds.append(kind)
@@ -487,6 +561,7 @@ class Engine:
     def _emit_first_token(self, req: Request, tok: int, seq_len: int, t):
         """First token after a (re-)prefill; a resumed request keeps its
         original TTFT."""
+        self.unregister_inflight(req.rid)   # prefill committed: twins now hit
         m = self.metrics.req(req.rid)
         if m.t_first_token is None:
             m.t_first_token = t

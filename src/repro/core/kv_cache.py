@@ -79,6 +79,10 @@ class PageAllocator:
         free capacity, so admission must budget it like a fresh alloc.)"""
         return self._ref.get(page, 0) > 0
 
+    def ref_count(self, page: int) -> int:
+        """Live-request references on ``page`` (0 = unmapped/reclaimable)."""
+        return self._ref.get(page, 0)
+
     def n_exclusive(self, rid: int) -> int:
         """Pages only ``rid`` references — the capacity that freeing it
         would actually return (shared pages merely decref)."""
@@ -96,10 +100,13 @@ class PageAllocator:
         """Take one page, stripping the reclaimable cache pool if the free
         list is dry (this — not preemption — is the first pressure valve)."""
         if not self._free and self.cache is not None:
+            # strip order = the cache's EvictionPolicy (built by the engine
+            # from ServeConfig.resolved_eviction_policy)
             page = self.cache.pop_reclaimable()
             if page is not None:
                 self.n_reclaims += 1
-                self._event("reclaim", rid=rid, page=page)
+                self._event("reclaim", rid=rid, page=page,
+                            cost=self.cache.last_evict_cost)
                 self._free.append(page)
         if not self._free:
             raise OutOfPages(f"need 1, have {self.n_free}")

@@ -3,8 +3,58 @@ throughput, plus KV-cache usage traces (Fig. 5/14/15)."""
 from __future__ import annotations
 
 import statistics
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
+
+DEFAULT_SCHED_EVENTS_CAP = 16384
+
+
+class EventRing:
+    """Bounded scheduler-event trace (list-like, oldest-first).
+
+    Long open-loop runs emit an admit/preempt/reclaim event stream that
+    previously grew without bound; this ring keeps the newest ``cap``
+    events and counts what it dropped (``n_dropped``) so consumers can
+    tell a short trace from a truncated one.  Supports the list surface
+    existing readers use: iteration, ``len``, indexing and slicing.
+    """
+
+    def __init__(self, cap: int = DEFAULT_SCHED_EVENTS_CAP):
+        if cap <= 0:
+            raise ValueError(f"EventRing cap must be positive, got {cap}")
+        self.cap = cap
+        self._buf: deque = deque(maxlen=cap)
+        self.n_dropped = 0
+
+    def append(self, event: dict) -> None:
+        if len(self._buf) == self.cap:
+            self.n_dropped += 1
+        self._buf.append(event)
+
+    @property
+    def n_total(self) -> int:
+        """Events ever appended (retained + dropped) — a stable cursor
+        for "what arrived since" bookkeeping that survives drops."""
+        return len(self._buf) + self.n_dropped
+
+    def __iter__(self) -> Iterator[dict]:
+        return iter(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self._buf)[idx]
+        return self._buf[idx]
+
+    def __repr__(self) -> str:
+        return (f"EventRing(cap={self.cap}, n={len(self._buf)}, "
+                f"dropped={self.n_dropped})")
 
 
 @dataclass
@@ -43,8 +93,16 @@ class EngineMetrics:
     requests: Dict[int, RequestMetrics] = field(default_factory=dict)
     kv_usage_trace: List[float] = field(default_factory=list)
     step_kinds: List[str] = field(default_factory=list)
-    # scheduler-event trace: dicts {"t", "event": "admit"|"preempt", "rid", ...}
-    sched_events: List[dict] = field(default_factory=list)
+    # scheduler-event trace: dicts {"t", "event": "admit"|"preempt", "rid",
+    # ...}; bounded ring (ServeConfig.sched_events_cap), oldest dropped
+    sched_events: EventRing = field(default_factory=EventRing)
+    # policy-layer counters (core/policies.py): admission_reorders,
+    # admission_holds, cheap_preemptions, cost_evictions (ints) and
+    # cost_flops_evicted (float)
+    policy_counters: Dict[str, float] = field(default_factory=dict)
+    # preemptions performed, ever — unlike the sched_events ring this
+    # never drops, so step-kind accounting stays lossless at tiny caps
+    n_preempt_events: int = 0
     t_start: float = 0.0
     t_end: float = 0.0
     n_steps: int = 0
@@ -59,6 +117,10 @@ class EngineMetrics:
         if rid not in self.requests:
             self.requests[rid] = RequestMetrics(rid)
         return self.requests[rid]
+
+    def bump(self, counter: str, n: float = 1) -> None:
+        """Increment a policy-layer counter (created on first use)."""
+        self.policy_counters[counter] = self.policy_counters.get(counter, 0) + n
 
     def summary(self) -> dict:
         done = [r for r in self.requests.values() if r.t_done is not None]
@@ -99,4 +161,6 @@ class EngineMetrics:
             "n_reclaims": self.prefix_cache_stats.get("n_reclaims", 0),
             "n_cow": self.prefix_cache_stats.get("n_cow", 0),
             "prefix_cache": dict(self.prefix_cache_stats),
+            "sched_events_dropped": getattr(self.sched_events, "n_dropped", 0),
+            "policy_counters": dict(self.policy_counters),
         }

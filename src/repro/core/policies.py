@@ -1,0 +1,247 @@
+"""Pluggable scheduling policies: admission, eviction, preemption.
+
+Splitwiser's constrained-resource premise makes the three scheduling
+decisions — who gets admitted, which cached KV pages get reclaimed, who
+gets preempted — the dominant lever on throughput and TTFT once kernels
+and the shared-prefix cache are in place (SARATHI and Lin et al.'s
+single-moderate-GPU study both put the policy choice, not kernel speed,
+on the frontier).  This module makes each decision a first-class,
+swappable object; ``core/scheduler.py`` keeps only the mechanism
+(budgets, eligibility, queue surgery).
+
+Invariant shared by every policy: policies change *when* work happens,
+never *what* is computed.  Sampling is batch/mode/history-independent
+(``(seed, rid, pos)`` PRNG streams), so greedy and sampled token streams
+are bit-identical across every ``admission x eviction x preempt``
+combination (``tests/test_policies.py``).
+
+Admission (:class:`AdmissionPolicy` — ``serve.admission_policy``)
+    ``fcfs``        pop the waiting queue in arrival order (seed behaviour).
+    ``cache_aware`` each admission round, order the waiting queue so
+                    requests whose prefixes are *resident* in the prefix
+                    cache are co-scheduled first (their pages remap instead
+                    of recompute), and *hold back* a request whose prefix
+                    is currently being prefilled by an in-flight request
+                    (the engine's in-flight registry): it waits one round
+                    and hits, instead of double-missing alongside the
+                    twin that is about to insert its pages.
+
+Eviction (:class:`EvictionPolicy` — ``serve.eviction_policy``)
+    Ranks the prefix cache's reclaimable zero-ref *leaf* pages; the
+    lowest-ranked leaf is stripped first when the free list runs dry.
+    ``lru``   least-recently-hit leaf first (today's default).
+    ``fifo``  oldest-inserted leaf first.
+    ``cost``  cheapest-to-recompute leaf first, by the per-page
+              recompute-FLOPs proxy ``PrefixCache.page_cost``: a deep
+              page's recompute replays attention over its whole prefix
+              (expensive — keep), a shallow long-tail leaf is nearly
+              free to rebuild (evict).  Descendant counts weight pages
+              that anchor large cached subtrees.
+
+Preemption (:class:`PreemptPolicy` — ``serve.preempt_policy``)
+    Picks one victim among the mechanism's eligible candidates (running
+    requests strictly younger than the needy one whose eviction actually
+    frees pages).
+    ``latest``      latest-arrival victim (today's default).
+    ``cache_aware`` victim whose committed KV would mostly *survive* its
+                    own eviction — pages shared with another live request
+                    keep serving hits, so the resume is a block-table
+                    remap, not a recompute (``Engine.resume_safe_pages``).
+                    Tie-broken by latest arrival.
+    ``none``        preemption disabled (seed crash-on-exhaustion arm);
+                    handled by the scheduler, no policy object.
+
+Registries map config strings to classes; ``ServeConfig.__post_init__``
+validates against them so a typo fails at config time, not mid-serve.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+
+# --------------------------------------------------------------- admission --
+class AdmissionPolicy:
+    """Orders (and may hold back) the waiting queue for one admission round.
+
+    ``order`` ranks the round's candidates once; ``holds`` is consulted
+    per candidate *inside* the admission loop — after earlier candidates
+    of the same round have registered their in-flight prefills — so a
+    policy can defer a request based on what this very round has just
+    admitted (the double-miss case).  A held request is skipped, not a
+    head-of-line block.
+    """
+
+    name = "base"
+
+    def order(self, sched) -> List:
+        raise NotImplementedError
+
+    def holds(self, sched, req) -> bool:
+        return False
+
+
+class FCFSAdmission(AdmissionPolicy):
+    """Arrival order, head-of-line blocking — the seed behaviour."""
+
+    name = "fcfs"
+
+    def order(self, sched) -> List:
+        return list(sched.waiting)
+
+
+class CacheAwareAdmission(AdmissionPolicy):
+    """Co-schedule resident prefixes; hold twins of in-flight prefills.
+
+    ``order``: resident-hit pages sort first (descending, one trie walk
+    per waiting request via ``Engine.cache_probe``), FCFS
+    ``(arrival, rid)`` breaks ties — so a zero-hit queue degenerates to
+    exact FCFS.  ``holds``: a request is skipped for the round when some
+    in-flight prefill (including one admitted earlier in this same
+    round) will cache strictly more of its prefix than is resident now —
+    admitting it would double-miss work its twin is already computing.
+    Holding cannot deadlock: an in-flight entry exists only while its
+    owner is actively prefilling (unregistered at completion and at
+    preemption), so the held request is reconsidered next round against
+    a warmer cache.
+    """
+
+    name = "cache_aware"
+
+    def order(self, sched) -> List:
+        ranked = [(-sched.probe(r)[0], r.arrival, r.rid, r)
+                  for r in sched.waiting]
+        ranked.sort(key=lambda t: t[:3])
+        out = [t[3] for t in ranked]
+        if [r.rid for r in out] != [r.rid for r in sched.waiting]:
+            sched.metrics.bump("admission_reorders")
+        return out
+
+    def holds(self, sched, req) -> bool:
+        # the in-flight scan stays live (same-round admits register), only
+        # the trie probe is round-memoized
+        if sched.eng.inflight_hit_pages(req) > sched.probe(req)[0]:
+            sched.metrics.bump("admission_holds")
+            return True
+        return False
+
+
+# ---------------------------------------------------------------- eviction --
+class EvictionPolicy:
+    """Ranks reclaimable prefix-cache leaves; the min-rank leaf is evicted."""
+
+    name = "base"
+
+    def rank(self, node, cache):
+        raise NotImplementedError
+
+
+class LRUEviction(EvictionPolicy):
+    name = "lru"
+
+    def rank(self, node, cache):
+        return node.last_used
+
+
+class FIFOEviction(EvictionPolicy):
+    name = "fifo"
+
+    def rank(self, node, cache):
+        return node.nid
+
+
+class CostEviction(EvictionPolicy):
+    """Evict the page whose recompute is cheapest (FLOPs-saved-per-page
+    cost model): rank by ``PrefixCache.page_cost`` — depth-weighted
+    attention replay plus descendant fan-out — with LRU as tie-break."""
+
+    name = "cost"
+
+    def rank(self, node, cache):
+        return (cache.page_cost(node.page), node.last_used)
+
+
+# -------------------------------------------------------------- preemption --
+class PreemptPolicy:
+    """Chooses one eviction victim from the mechanism's candidates.
+
+    ``candidates`` rows are ``(kind, index, req, committed)`` — container
+    kind ("slot"/"stream"), position, the running request, and its
+    committed-KV token count.  Returns ``(kind, index)`` or None.
+    """
+
+    name = "base"
+
+    def select(self, candidates: List[Tuple], eng) -> Optional[Tuple[str, int]]:
+        raise NotImplementedError
+
+
+class LatestPreempt(PreemptPolicy):
+    """Latest-arrival victim: arrival order stays a total priority order,
+    so the oldest request always makes progress (termination argument in
+    ``core/scheduler.py``)."""
+
+    name = "latest"
+
+    def select(self, candidates, eng):
+        if not candidates:
+            return None
+        kind, i, _, _ = max(candidates, key=lambda c: (c[2].arrival, c[2].rid))
+        return kind, i
+
+
+class CacheAwarePreempt(PreemptPolicy):
+    """Prefer the victim whose committed KV mostly survives its eviction.
+
+    ``Engine.resume_safe_pages`` counts the victim's committed full pages
+    that are cached *and* referenced by another live request — those keep
+    serving after the victim's refcounts drop, so its resume re-hits them
+    (remap ≈ free) instead of recomputing the whole prefix.  The score is
+    the surviving fraction of committed pages; latest ``(arrival, rid)``
+    breaks ties, so with a cold cache this degenerates to ``latest``.
+    """
+
+    name = "cache_aware"
+
+    def select(self, candidates, eng):
+        if not candidates:
+            return None
+        best, best_key, best_safe = None, None, 0
+        for kind, i, req, committed in candidates:
+            n_safe = eng.resume_safe_pages(req, committed)
+            frac = n_safe / max(eng.alloc.pages_needed(committed), 1)
+            key = (frac, req.arrival, req.rid)
+            if best_key is None or key > best_key:
+                best, best_key, best_safe = (kind, i), key, n_safe
+        if best_safe > 0:
+            eng.metrics.bump("cheap_preemptions")
+        return best
+
+
+# -------------------------------------------------------------- registries --
+ADMISSION_POLICIES = {p.name: p for p in (FCFSAdmission, CacheAwareAdmission)}
+EVICTION_POLICIES = {p.name: p for p in (LRUEviction, FIFOEviction,
+                                         CostEviction)}
+# "none" disables preemption entirely (seed arm); it is a valid config
+# value but has no policy object — the scheduler short-circuits it.
+PREEMPT_POLICIES = {p.name: p for p in (LatestPreempt, CacheAwarePreempt)}
+
+
+def _make(registry, kind: str, name: str):
+    if name not in registry:
+        raise ValueError(f"unknown {kind} {name!r}; expected one of "
+                         f"{', '.join(sorted(registry))}")
+    return registry[name]()
+
+
+def make_admission(name: str) -> AdmissionPolicy:
+    return _make(ADMISSION_POLICIES, "admission_policy", name)
+
+
+def make_eviction(name: str) -> EvictionPolicy:
+    return _make(EVICTION_POLICIES, "eviction_policy", name)
+
+
+def make_preempt(name: str) -> Optional[PreemptPolicy]:
+    if name == "none":
+        return None
+    return _make(PREEMPT_POLICIES, "preempt_policy", name)

@@ -33,19 +33,28 @@ engine has last-token logits to sample from).  Writes therefore never
 land in shared pages on today's engine paths; the allocator's
 copy-on-write (``prepare_write``) is the safety net that keeps that an
 invariant rather than an assumption.
+
+Which reclaimable leaf is stripped first is an
+:class:`~repro.core.policies.EvictionPolicy` decision (lru / fifo /
+cost); the trie only supplies the mechanism — leaf enumeration and the
+``page_cost`` recompute-FLOPs proxy the cost model ranks by.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-PREFIX_CACHE_POLICIES = ("lru", "fifo")
+from repro.core.policies import EVICTION_POLICIES, EvictionPolicy, make_eviction
+
+# legacy alias (pre-policy-layer name); new code should key off
+# policies.EVICTION_POLICIES, which adds "cost"
+PREFIX_CACHE_POLICIES = tuple(sorted(EVICTION_POLICIES))
 
 _ROOT = 0          # parent id of first-page nodes
 
 
 class _Node:
     __slots__ = ("nid", "key", "page", "parent", "n_children", "last_used",
-                 "reclaimable")
+                 "reclaimable", "depth", "n_desc")
 
     def __init__(self, nid: int, key, page: int, parent: Optional["_Node"]):
         self.nid = nid
@@ -55,24 +64,32 @@ class _Node:
         self.n_children = 0
         self.last_used = 0
         self.reclaimable = False
+        self.depth = 0 if parent is None else parent.depth + 1
+        self.n_desc = 0                 # cached nodes anywhere below this one
 
 
 class PrefixCache:
     """Page-granular prefix trie with a reclaimable (zero-ref) pool."""
 
-    def __init__(self, page_size: int, policy: str = "lru"):
-        if policy not in PREFIX_CACHE_POLICIES:
-            raise ValueError(
-                f"unknown prefix_cache_policy {policy!r}; expected one of "
-                f"{', '.join(PREFIX_CACHE_POLICIES)}")
+    def __init__(self, page_size: int, policy="lru"):
+        if isinstance(policy, EvictionPolicy):
+            self.default_policy = policy
+        else:
+            try:
+                self.default_policy = make_eviction(policy)
+            except ValueError:
+                raise ValueError(
+                    f"unknown prefix_cache_policy {policy!r}; expected one "
+                    f"of {', '.join(sorted(EVICTION_POLICIES))}") from None
         self.page_size = page_size
-        self.policy = policy
+        self.policy = self.default_policy.name
         self._nodes: Dict[Tuple[int, Tuple[int, ...]], _Node] = {}
         self._by_page: Dict[int, _Node] = {}
         self._reclaimable: Dict[int, _Node] = {}    # page -> node, ref == 0
         self._tick = 0
         self._next_nid = _ROOT + 1
         self.n_evicted = 0   # reclaimed/evicted nodes (engine stats)
+        self.last_evict_cost = 0.0   # page_cost of the latest pop (trace)
 
     # ------------------------------------------------------------ lookup ---
     def _chunks(self, tokens: List[int]):
@@ -133,6 +150,10 @@ class PrefixCache:
                 self._by_page[page] = node
                 if parent is not None:
                     parent.n_children += 1
+                    anc = parent
+                    while anc is not None:       # descendant accounting
+                        anc.n_desc += 1
+                        anc = anc.parent
                 new += 1
             node.last_used = self._tick
             parent, parent_id = node, node.nid
@@ -162,26 +183,86 @@ class PrefixCache:
         node = self._reclaimable.pop(page)
         node.reclaimable = False
 
-    def pop_reclaimable(self) -> Optional[int]:
-        """Evict the best zero-ref *leaf* (no cached children) and return
-        its page to the caller.  Leaf-first keeps every remaining chain
-        intact; since a referenced child implies a referenced parent
-        (requests map whole prefix chains), every reclaimable page is
-        eventually poppable this way.
+    def page_cost(self, page: int) -> float:
+        """Recompute-FLOPs-saved proxy for a cached page (dimensionless,
+        model-free): rebuilding the page's ``page_size`` tokens replays
+        the per-token linear work plus attention over everything before
+        them, so cost grows with depth — a deep chain page is expensive
+        to lose, a shallow long-tail leaf is nearly free.  Pages anchoring
+        cached subtrees are weighted by their descendant count (evicting
+        them would orphan the whole chain below; relevant to policies
+        comparing non-leaf pages — for the leaf-first strip the factor
+        is 1).
         """
-        def rank(node: _Node) -> int:
-            return node.last_used if self.policy == "lru" else node.nid
+        node = self._by_page[page]
+        ps = self.page_size
+        end = (node.depth + 1) * ps           # context length at page end
+        return (1 + node.n_desc) * ps * (ps + end)
 
+    def pop_reclaimable(self, policy: Optional[EvictionPolicy] = None
+                        ) -> Optional[int]:
+        """Evict the policy's lowest-ranked zero-ref *leaf* (no cached
+        children) and return its page to the caller.  Leaf-first keeps
+        every remaining chain intact; since a referenced child implies a
+        referenced parent (requests map whole prefix chains), every
+        reclaimable page is eventually poppable this way.
+        """
+        policy = policy or self.default_policy
         best: Optional[_Node] = None
+        best_rank = None
         for node in self._reclaimable.values():
             if node.n_children:
                 continue
-            if best is None or rank(node) < rank(best):
-                best = node
+            r = policy.rank(node, self)
+            if best is None or r < best_rank:
+                best, best_rank = node, r
+        if best is None and self._reclaimable:
+            best = self._pop_blocked(policy)
         if best is None:
             return None
+        self.last_evict_cost = self.page_cost(best.page)
         self._evict(best)
         return best.page
+
+    def _pop_blocked(self, policy: EvictionPolicy) -> Optional[_Node]:
+        """Rare fallback: every reclaimable page sits above *referenced*
+        descendants, so no leaf is strippable.  (Engine paths never get
+        here — they only write at the sequence tail — but an interior
+        ``prepare_write`` COW releases a mid-chain page while its chain
+        stays mapped.)  ``n_free`` counts every reclaimable page, so the
+        capacity promise must be kept: take the best-ranked reclaimable
+        with no reclaimable below it and evict its whole (all-referenced)
+        subtree from the trie — descendant pages stay owned by their
+        requests, they just stop being cached, and return to the free
+        list when their owners release them."""
+        blocked = set()
+        for node in self._reclaimable.values():
+            anc = node.parent
+            while anc is not None:
+                if anc.reclaimable:
+                    blocked.add(anc.nid)
+                anc = anc.parent
+        best: Optional[_Node] = None
+        best_rank = None
+        for node in self._reclaimable.values():
+            if node.nid in blocked:
+                continue
+            r = policy.rank(node, self)
+            if best is None or r < best_rank:
+                best, best_rank = node, r
+        if best is None:        # unreachable: the deepest reclaimable in
+            return None         # any chain is never blocked
+        doomed = []
+        for node in self._nodes.values():
+            anc = node.parent
+            while anc is not None:
+                if anc is best:
+                    doomed.append(node)
+                    break
+                anc = anc.parent
+        for node in sorted(doomed, key=lambda n: -n.depth):
+            self._evict(node)   # leaf-upward keeps child counts consistent
+        return best             # now a leaf; caller evicts and returns it
 
     def _evict(self, node: _Node) -> None:
         del self._nodes[node.key]
@@ -189,4 +270,8 @@ class PrefixCache:
         self._reclaimable.pop(node.page, None)
         if node.parent is not None:
             node.parent.n_children -= 1
+            anc = node.parent
+            while anc is not None:
+                anc.n_desc -= 1
+                anc = anc.parent
         self.n_evicted += 1

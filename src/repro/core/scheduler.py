@@ -1,4 +1,5 @@
-"""Admission control and preemption for the serving engine.
+"""Scheduling mechanism for the serving engine (policies live in
+``core/policies.py``).
 
 The paper's premise is serving under *constrained resources*: its
 Fig. 5/14/15 analysis shows KV-cache usage climbing toward exhaustion as
@@ -7,34 +8,45 @@ reserved pages for ``len(prompt)+1`` tokens while decode kept allocating
 a page every ``page_size`` generated tokens, so ``PageAllocator.extend_to``
 eventually raised :class:`OutOfPages` from the decode path.
 
-This module makes page pressure a first-class scheduling concern (the
-subsystem vLLM and SARATHI-style single-GPU schedulers treat as such):
+This module keeps the *mechanism* of page-pressure scheduling — budgets,
+eligibility, queue surgery, event tracing — while every *decision* is a
+pluggable :mod:`repro.core.policies` object chosen by ``ServeConfig``:
 
 Admission (watermark-based, ``max_new_tokens``-aware)
     A waiting request is admitted only when the pool keeps a
     ``serve.watermark`` fraction free *after* reserving pages for its
     prompt plus ``serve.decode_reserve`` of its remaining generation
-    budget.  Head-of-line progress guarantee: when nothing holds pages,
-    the head request is admitted whenever its bare prompt fits — and if
-    even that exceeds the pool, :class:`OutOfPages` is raised eagerly
+    budget.  Which request is *considered* next is the
+    ``AdmissionPolicy``'s call: ``fcfs`` walks the queue in arrival
+    order; ``cache_aware`` co-schedules resident prefixes first and
+    holds a request whose prefix an in-flight prefill is about to cache
+    (it waits one round and remaps instead of double-missing).
+    Head-of-line progress guarantee: when nothing holds pages, the first
+    considered request is admitted whenever its bare prompt fits — and
+    if even that exceeds the pool, :class:`OutOfPages` is raised eagerly
     with a sizing message instead of mid-decode.
 
-Preemption by recomputation (``serve.preempt_policy == "latest"``)
-    When a page extension would exhaust the pool, the running request
-    (decode slot or prefill stream) with the *latest* arrival among
-    those younger than the needy one is evicted: its pages are freed and
-    the request is requeued at the front of the waiting queue.  On
-    re-admission it prefills ``prompt + out_tokens`` so greedy decoding
-    resumes exactly where it stopped.  Arrival order gives a total
-    priority order — the oldest running request always makes progress —
-    so any workload whose requests individually fit the pool terminates.
-    ``preempt_policy == "none"`` restores the seed crash-on-exhaustion
-    behaviour (used by benchmarks to show the graceful-degradation
-    delta).
+Preemption by recomputation
+    When a page extension would exhaust the pool, the ``PreemptPolicy``
+    picks a victim among the running requests strictly younger than the
+    needy one (eligibility — and with it the termination argument — is
+    mechanism, not policy): its pages are freed and the request is
+    requeued at the front of the waiting queue.  On re-admission it
+    prefills ``prompt + out_tokens`` so greedy decoding resumes exactly
+    where it stopped.  ``latest`` evicts the latest arrival;
+    ``cache_aware`` prefers victims whose committed KV survives their
+    own eviction (pages shared with live requests — resume is a remap,
+    not a recompute), tie-broken by latest arrival.  Arrival order still
+    bounds every choice — the oldest running request always makes
+    progress — so any workload whose requests individually fit the pool
+    terminates.  ``preempt_policy == "none"`` restores the seed
+    crash-on-exhaustion behaviour (used by benchmarks to show the
+    graceful-degradation delta).
 
-Every decision is recorded in ``EngineMetrics.sched_events`` and
-aggregated by ``EngineMetrics.summary()`` so benchmarks can plot
-graceful-degradation curves.
+Every decision is recorded in ``EngineMetrics.sched_events`` (a capped
+ring — ``serve.sched_events_cap``) and aggregated by
+``EngineMetrics.summary()`` so benchmarks can plot graceful-degradation
+curves; policy-specific counters land in ``EngineMetrics.policy_counters``.
 """
 from __future__ import annotations
 
@@ -43,26 +55,37 @@ from collections import deque
 from typing import Deque, List, Optional, Tuple
 
 from repro.core.kv_cache import OutOfPages
+from repro.core.policies import make_admission, make_preempt
 
 
 class Scheduler:
     """Owns every admission and page-pressure decision for one Engine.
 
     The engine keeps the mechanism (batch assembly, jit dispatch, block
-    tables); the scheduler keeps the policy.  It reads/writes the
+    tables); the scheduler keeps the budgets and eligibility rules and
+    delegates each choice to its policy objects.  It reads/writes the
     engine's ``slots`` / ``streams`` lists directly when evicting.
     """
 
     def __init__(self, engine):
         self.eng = engine
         self.serve = engine.serve
-        if self.serve.preempt_policy not in ("latest", "none"):
-            raise ValueError(
-                f"unknown preempt_policy {self.serve.preempt_policy!r}; "
-                "expected 'latest' or 'none'")
-        self.alloc = engine.alloc
+        self.admission = make_admission(self.serve.admission_policy)
+        self.preempt_pol = make_preempt(self.serve.preempt_policy)  # None =
+        self.alloc = engine.alloc                                   # disabled
         self.metrics = engine.metrics
         self.waiting: Deque = deque()
+        self._round_probes: dict = {}   # rid -> cache_probe, one round only
+
+    def probe(self, req) -> Tuple[int, int]:
+        """``Engine.cache_probe`` memoized for the current admission
+        round (the trie and page references don't change mid-round, and
+        policy ordering, hold checks and budgeting would otherwise each
+        repeat the same walk per candidate)."""
+        hit = self._round_probes.get(req.rid)
+        if hit is None:
+            hit = self._round_probes[req.rid] = self.eng.cache_probe(req)
+        return hit
 
     # ------------------------------------------------------------ queue ----
     def submit(self, req) -> None:
@@ -114,38 +137,51 @@ class Scheduler:
                 f"{self.serve.max_pages_per_seq}; raise max_pages_per_seq")
         return need
 
-    def _admit_head(self, budget: int, first: bool) -> Tuple[Optional[object], int]:
-        """Pop the head request if it fits `budget`.  Progress override:
-        when the pool is completely idle and this would be the first
-        admission, the head is admitted on a bare-prompt fit even if the
-        watermark/headroom budget says no (otherwise a big request could
-        wait forever behind its own reservation)."""
-        r = self.waiting[0]
+    def _try_admit(self, r, budget: int, first: bool) -> Tuple[bool, int]:
+        """Admit `r` (removing it from the waiting queue) if it fits
+        `budget`.  Progress override: when the pool is completely idle
+        and this would be the round's first admission, the request is
+        admitted on a bare-prompt fit even if the watermark/headroom
+        budget says no (otherwise a big request could wait forever
+        behind its own reservation)."""
         bare = self._bare_pages(r)      # raises when it can never fit
-        n_hit, n_free_hit = self.eng.cache_probe(r)   # one trie walk
+        n_hit, n_free_hit = self.probe(r)
         need = self.admission_pages(r, n_free_hit)
         if need > budget:
             if not (first and self.alloc.n_allocated == 0):
-                return None, budget
+                return False, budget
             need = bare
-        self.waiting.popleft()
+        self.waiting.remove(r)
+        self.eng.register_inflight(r)
         self._event("admit", r.rid, pages=need, cached_pages=n_hit,
                     resumed=bool(r.out_tokens))
-        return r, budget - need
+        return True, budget - need
 
     def _admit_up_to(self, limit: int) -> List:
+        """One admission round: the policy orders (and may hold back)
+        the waiting queue; the budget walk stops at the first candidate
+        that doesn't fit (head-of-line blocking within the policy's
+        order, which for ``fcfs`` is exactly the seed behaviour)."""
         out: List = []
+        if limit <= 0 or not self.waiting:
+            return out      # no round: skip policy ordering (and its
+                            # trie walks / reorder-hold counters) entirely
         budget = self.alloc.n_free - self.watermark_pages
-        while self.waiting and len(out) < limit:
-            r, budget = self._admit_head(budget, first=not out)
-            if r is None:
+        self._round_probes = {}
+        for r in self.admission.order(self):
+            if len(out) >= limit:
+                break
+            if self.admission.holds(self, r):
+                continue        # skipped this round, not a budget block
+            ok, budget = self._try_admit(r, budget, first=not out)
+            if not ok:
                 break
             out.append(r)
         return out
 
     def take_prefillable(self) -> List:
-        """Sequential-mode admission: head-of-queue requests that fit the
-        free decode slots and the watermarked page budget."""
+        """Sequential-mode admission: requests that fit the free decode
+        slots and the watermarked page budget, in policy order."""
         return self._admit_up_to(sum(s is None for s in self.eng.slots))
 
     def admit_streams(self) -> List:
@@ -156,7 +192,7 @@ class Scheduler:
     # -------------------------------------------------------- preemption ---
     def ensure_pages(self, req, n_tokens: int, protect=()) -> bool:
         """Make the allocator able to extend `req` to `n_tokens`,
-        evicting younger victims under the "latest" policy.
+        evicting victims chosen by the preempt policy.
 
         Returns False when only older requests (or `protect`-ed ones)
         hold the remaining pages — the caller yields (self-preempts or
@@ -171,7 +207,7 @@ class Scheduler:
         need = self.alloc.pages_needed(n_tokens) - len(self.alloc.owned(req.rid))
         if need <= 0 or self.alloc.can_alloc(need):
             return True
-        if self.serve.preempt_policy == "latest":
+        if self.preempt_pol is not None:
             while not self.alloc.can_alloc(need):
                 victim = self._pick_victim(req, protect)
                 if victim is None:
@@ -186,9 +222,13 @@ class Scheduler:
                 f"{self.alloc.n_pages - 1}; raise n_pages/page_size")
         return False
 
-    def _pick_victim(self, needy, protect=()) -> Optional[Tuple[str, int]]:
-        """Latest-arrival running request strictly younger than `needy`."""
-        best_key, best = None, None
+    def _victim_candidates(self, needy, protect=()) -> List[Tuple]:
+        """Eligible victims: running requests strictly younger than
+        `needy` (arrival order stays a total priority order — the
+        termination guarantee is mechanism, not policy) whose eviction
+        would actually free capacity.  Rows are
+        ``(kind, index, req, committed_tokens)``."""
+        cands: List[Tuple] = []
         for kind, cont in (("slot", self.eng.slots),
                            ("stream", self.eng.streams)):
             for i, s in enumerate(cont):
@@ -197,12 +237,15 @@ class Scheduler:
                 if not self.alloc.n_exclusive(s.req.rid):
                     continue     # page-less, or every page shared with a
                                  # live reader: evicting frees nothing
-                key = (s.req.arrival, s.req.rid)
-                if key <= (needy.arrival, needy.rid):
+                if (s.req.arrival, s.req.rid) <= (needy.arrival, needy.rid):
                     continue
-                if best_key is None or key > best_key:
-                    best_key, best = key, (kind, i)
-        return best
+                committed = s.seq_len if kind == "slot" else s.pos
+                cands.append((kind, i, s.req, committed))
+        return cands
+
+    def _pick_victim(self, needy, protect=()) -> Optional[Tuple[str, int]]:
+        return self.preempt_pol.select(
+            self._victim_candidates(needy, protect), self.eng)
 
     def preempt(self, kind: str, index: int, reason: str = "") -> None:
         """Evict a running request: free its pages and requeue it with
@@ -218,9 +261,11 @@ class Scheduler:
         # them in the meantime)
         committed = victim.seq_len if kind == "slot" else victim.pos
         self.eng.cache_insert(r, committed)
+        self.eng.unregister_inflight(r.rid)
         freed = self.alloc.free(r.rid)
         self.requeue(r)
         self.metrics.req(r.rid).n_preempted += 1
+        self.metrics.n_preempt_events += 1
         self._event("preempt", r.rid, kind=kind, pages=freed, reason=reason)
 
     # ------------------------------------------------------------ trace ----

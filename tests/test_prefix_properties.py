@@ -1,0 +1,167 @@
+"""Hypothesis property tests: PrefixCache + PageAllocator invariants.
+
+Random interleavings of the engine's cache lifecycle — insert, match,
+share, alloc (with reclaim), copy-on-write, free — must never violate:
+
+* refcounts stay positive (zero-ref entries leave the table entirely);
+* page conservation: every usable page is in exactly one of
+  {free list, reclaimable pool, live-referenced}, so
+  ``reclaimable + live == allocated-from-free-list`` and
+  ``n_free + len(_ref) == n_pages - 1``;
+* trie structure: parent-before-child (every non-root node's parent is
+  live and was created first) and consistent child/descendant counts —
+  a reclaimable-leaf pop never orphans a chain.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import OutOfPages, PageAllocator
+from repro.core.policies import make_eviction
+from repro.core.prefix_cache import PrefixCache
+
+PS = 4
+
+
+def _check_invariants(alloc: PageAllocator, cache: PrefixCache):
+    # refcount >= 0 (entries are deleted at zero, so live ones are >= 1)
+    assert all(c >= 1 for c in alloc._ref.values())
+    # conservation: free list + reclaimable + live == usable pool, disjoint
+    free = set(alloc._free)
+    recl = set(cache._reclaimable)
+    live = set(alloc._ref)
+    assert not (free & recl) and not (free & live) and not (recl & live)
+    assert len(free) + len(recl) + len(live) == alloc.n_pages - 1
+    assert alloc.n_free == len(free) + len(recl)
+    assert len(live) == alloc.n_allocated          # reclaimable + live split
+    # ownership table matches the refcounts exactly
+    counts = {}
+    for pages in alloc._owned.values():
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+    assert counts == alloc._ref
+    # trie: parents live, created-before-child, consistent counts
+    n_children = {}
+    n_desc_leafward = {}
+    for node in cache._nodes.values():
+        if node.parent is not None:
+            assert node.parent.key in cache._nodes       # parent-before-child
+            assert node.parent.nid < node.nid
+            assert node.depth == node.parent.depth + 1
+            anc = node.parent
+            while anc is not None:
+                n_desc_leafward[anc.nid] = n_desc_leafward.get(anc.nid, 0) + 1
+                anc = anc.parent
+            n_children[node.parent.nid] = n_children.get(node.parent.nid, 0) + 1
+        else:
+            assert node.depth == 0
+    for node in cache._nodes.values():
+        assert node.n_children == n_children.get(node.nid, 0)
+        assert node.n_desc == n_desc_leafward.get(node.nid, 0)
+    # reclaimable nodes are cached, zero-ref
+    for page, node in cache._reclaimable.items():
+        assert cache._by_page[page] is node
+        assert page not in alloc._ref
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_cache_lifecycle_interleavings_preserve_invariants(data):
+    """Drive a random request lifecycle against a small pool: admissions
+    match+share the trie then alloc the miss pages (stripping reclaimable
+    leaves under pressure), writers COW shared/cached tail pages, and
+    finishes insert committed full pages before freeing."""
+    n_pages = data.draw(st.integers(6, 24))
+    policy = make_eviction(data.draw(st.sampled_from(["lru", "fifo", "cost"])))
+    cache = PrefixCache(PS, policy=policy)
+    alloc = PageAllocator(n_pages, PS, cache=cache)
+    # a tiny template pool makes prefix collisions (shared chains) common
+    templates = [
+        [data.draw(st.integers(0, 3)) for _ in range(PS * data.draw(st.integers(1, 4)))]
+        for _ in range(3)
+    ]
+    live = {}          # rid -> token list backing its owned pages
+    next_rid = 0
+    for _ in range(data.draw(st.integers(1, 30))):
+        op = data.draw(st.sampled_from(["admit", "finish", "write", "match"]))
+        if op == "admit":
+            t = data.draw(st.sampled_from(templates))
+            tail = [data.draw(st.integers(0, 9)) for _ in range(
+                data.draw(st.integers(0, 2 * PS)))]
+            tokens = list(t) + tail
+            rid = next_rid = next_rid + 1
+            hit = cache.match(tokens)
+            need = alloc.pages_needed(len(tokens)) - len(hit)
+            if not alloc.can_alloc(need + len(hit)):
+                continue            # admission rejected: no state change
+            alloc.share(rid, hit)   # hits first, so they can't be reclaimed
+            cache.touch(hit)        # out from under the request
+            if need:
+                alloc.alloc(rid, need)
+            live[rid] = tokens
+        elif op == "finish" and live:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            tokens = live.pop(rid)
+            n_full = len(tokens) // PS
+            if n_full:
+                cache.insert(tokens[: n_full * PS],
+                             alloc.owned(rid)[:n_full])
+            alloc.free(rid)
+        elif op == "write" and live:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            pos = data.draw(st.integers(0, max(len(live[rid]) - 1, 0)))
+            try:
+                alloc.prepare_write(rid, pos)
+            except OutOfPages:
+                pass    # legal refusal: COW needs a page and the pool is
+                        # dry — the engine never reaches this (cached
+                        # spans are capped below written positions), and
+                        # the invariants must survive the partial failure
+        elif op == "match":
+            t = data.draw(st.sampled_from(templates))
+            pages = cache.match(t)
+            assert len(pages) <= len(t) // PS
+        _check_invariants(alloc, cache)
+    # drain everything: the pool must be whole again
+    for rid in sorted(live):
+        alloc.free(rid)
+    _check_invariants(alloc, cache)
+    assert alloc.n_free == alloc.n_pages - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_reclaim_under_pressure_keeps_chains_intact(data):
+    """Exhaust the pool so allocs strip reclaimable leaves: after every
+    strip the surviving trie still satisfies parent-before-child, and a
+    re-match of any template returns a (possibly shorter) *prefix* of
+    its page chain — never a gapped one."""
+    n_pages = data.draw(st.integers(8, 16))
+    cache = PrefixCache(PS, policy=data.draw(
+        st.sampled_from(["lru", "fifo", "cost"])))
+    alloc = PageAllocator(n_pages, PS, cache=cache)
+    templates = []
+    rid = 0
+    # fill the cache with a few chains, freeing each owner
+    for _ in range(data.draw(st.integers(1, 4))):
+        n = data.draw(st.integers(1, 3))
+        tokens = [data.draw(st.integers(0, 2)) for _ in range(n * PS)]
+        if not alloc.can_alloc(n):
+            break
+        rid += 1
+        hit = cache.match(tokens)
+        alloc.share(rid, hit)
+        fresh = alloc.alloc(rid, n - len(hit)) if n - len(hit) else []
+        cache.insert(tokens, hit + fresh)
+        templates.append((tokens, cache.match(tokens)))
+        alloc.free(rid)
+    # hammer allocations until the pool (incl. reclaimable) is exhausted
+    while alloc.can_alloc(1):
+        rid += 1
+        alloc.alloc(rid, 1)
+        _check_invariants(alloc, cache)
+        for tokens, chain in templates:
+            got = cache.match(tokens)
+            assert got == chain[: len(got)]      # always a prefix, no gaps
+    assert cache.n_reclaimable == 0              # pressure drained the pool
