@@ -1,0 +1,120 @@
+"""CI benchmark-regression gate.
+
+Compares a fresh ``benchmarks/run.py --json`` output against the
+committed ``BENCH_baseline.json`` and fails (exit 1) when a guarded
+metric regresses beyond tolerance — so a PR that silently lowers the
+prefix-cache hit rate, recomputes more prefill tokens, or stops
+completing requests is caught by CI instead of landing.
+
+Only *deterministic* fields are gated (hit rates, token counts,
+completion counts); timing fields (throughput, TTFT) vary across
+runners and are deliberately ignored.  Rows are keyed by
+``(bench, x)``; a row present in the baseline but missing from the
+fresh run fails the gate (a scenario was dropped), new rows pass
+freely (they have no baseline yet).  Validation checks recorded in the
+baseline must not flip from pass to fail.
+
+    # refresh the committed baseline after an intentional change:
+    PYTHONPATH=src python -m benchmarks.run --only shared_prefix \
+        --json BENCH_baseline.json
+
+    # what CI runs on every PR:
+    PYTHONPATH=src python -m benchmarks.run --only shared_prefix \
+        --json bench_fresh.json
+    PYTHONPATH=src python -m benchmarks.regression_gate \
+        BENCH_baseline.json bench_fresh.json
+"""
+import argparse
+import json
+import sys
+
+# field -> (direction, kind): "min" fails when fresh < base - tol,
+# "max" fails when fresh > base + tol.  "rate" fields use the absolute
+# hit-rate tolerance; "count" fields use the relative count tolerance.
+GATED_FIELDS = {
+    "hit_rate": ("min", "rate"),
+    "hit_rate_on": ("min", "rate"),
+    "hit_rate_token": ("min", "rate"),
+    "n_done": ("min", "count"),
+    "cached_tokens": ("min", "count"),
+    "prefill_tokens": ("max", "count"),
+    "prefill_tokens_token": ("max", "count"),
+    "prefill_tokens_saved": ("min", "count"),
+    "n_partial_hits": ("min", "count"),
+}
+BOOL_FIELDS = ("all_complete", "tokens_match")   # must not flip true -> false
+
+
+def _rows_by_key(report: dict) -> dict:
+    return {(r["bench"], r["x"]): r for r in report.get("rows", [])}
+
+
+def compare(baseline: dict, fresh: dict, *, hit_rate_tol: float = 0.02,
+            count_tol: float = 0.02) -> list:
+    """Returns a list of human-readable regression strings (empty = pass)."""
+    failures = []
+    base_rows, fresh_rows = _rows_by_key(baseline), _rows_by_key(fresh)
+    for key, base in base_rows.items():
+        row = fresh_rows.get(key)
+        if row is None:
+            failures.append(f"{key}: scenario missing from fresh run")
+            continue
+        for field, (direction, kind) in GATED_FIELDS.items():
+            if field not in base or base[field] is None:
+                continue
+            b, f = base[field], row.get(field)
+            if f is None:
+                failures.append(f"{key}: field {field} missing from fresh run")
+                continue
+            tol = hit_rate_tol if kind == "rate" else count_tol * max(abs(b), 1)
+            if direction == "min" and f < b - tol:
+                failures.append(
+                    f"{key}: {field} regressed {b} -> {f} (tol {tol:.4g})")
+            elif direction == "max" and f > b + tol:
+                failures.append(
+                    f"{key}: {field} regressed {b} -> {f} (tol {tol:.4g})")
+        for field in BOOL_FIELDS:
+            if base.get(field) is True and row.get(field) is not True:
+                failures.append(
+                    f"{key}: {field} flipped {base[field]} -> {row.get(field)}")
+    base_checks = {c["msg"]: c["passed"] for c in baseline.get("checks", [])}
+    fresh_checks = {c["msg"]: c["passed"] for c in fresh.get("checks", [])}
+    for msg, passed in base_checks.items():
+        if not passed:
+            continue
+        if msg not in fresh_checks:
+            # a reworded/removed check must regenerate the baseline, not
+            # silently stop guarding what it checked
+            failures.append(f"validation check missing from fresh run: {msg}")
+        elif fresh_checks[msg] is not True:
+            failures.append(f"validation check now failing: {msg}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("fresh", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--hit-rate-tol", type=float, default=0.02,
+                    help="absolute tolerance on cache hit rates")
+    ap.add_argument("--count-tol", type=float, default=0.02,
+                    help="relative tolerance on token/completion counts")
+    args = ap.parse_args()
+    with open(args.baseline) as fp:
+        baseline = json.load(fp)
+    with open(args.fresh) as fp:
+        fresh = json.load(fp)
+    failures = compare(baseline, fresh, hit_rate_tol=args.hit_rate_tol,
+                       count_tol=args.count_tol)
+    n = len(_rows_by_key(baseline))
+    if failures:
+        print(f"BENCHMARK REGRESSION: {len(failures)} failure(s) "
+              f"across {n} baseline rows")
+        for f in failures:
+            print(f"  [FAIL] {f}")
+        sys.exit(1)
+    print(f"benchmark gate ok: {n} baseline rows within tolerance")
+
+
+if __name__ == "__main__":
+    main()

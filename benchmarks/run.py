@@ -52,21 +52,26 @@ def main() -> None:
 
     checks = []
     # ---- validation vs the paper's claims (directional) ----
-    if not args.only:
+    # checks are keyed on the rows actually collected, so partial runs
+    # (--only) still validate — and record in --json — whatever they ran
+    if all_rows:
 
         def by(b):
             return [r for r in all_rows if r["bench"] == b]
         pf = by("fig2_prefill_intensity")
         dc = by("fig3_decode_intensity")
-        checks.append(("prefill arithmetic intensity grows with input tokens",
-                       pf[-1]["arith_intensity"] > pf[0]["arith_intensity"]))
-        checks.append(("prefill is compute-bound at 2048 input tokens",
-                       pf[-1]["compute_bound"]))
-        checks.append(("decode stays bandwidth-bound at every context len",
-                       all(not r["compute_bound"] for r in dc)))
+        if pf and dc:
+            checks.append(("prefill arithmetic intensity grows with input "
+                           "tokens",
+                           pf[-1]["arith_intensity"] > pf[0]["arith_intensity"]))
+            checks.append(("prefill is compute-bound at 2048 input tokens",
+                           pf[-1]["compute_bound"]))
+            checks.append(("decode stays bandwidth-bound at every context len",
+                           all(not r["compute_bound"] for r in dc)))
         kv = by("fig5_kv_usage_vs_batch")
-        checks.append(("KV usage increases with batch size",
-                       kv[-1]["token_usage"] > kv[0]["token_usage"]))
+        if kv:
+            checks.append(("KV usage increases with batch size",
+                           kv[-1]["token_usage"] > kv[0]["token_usage"]))
         f7 = by("fig7_throughput_4proc")
         if f7:
             checks.append(("throughput(4 streams) >= 1.1x sequential (paper: 1.1x)",
@@ -112,6 +117,22 @@ def main() -> None:
                            "(K=1 saves more than K=N)",
                            k1["prefill_tokens_saved"]
                            >= kun["prefill_tokens_saved"]))
+        mp = by("midpage_delta")
+        if mp:
+            checks.append(("mid-page divergence: token-level caching "
+                           "strictly beats full-page on prefill tokens "
+                           "computed",
+                           all(r["prefill_tokens_token"]
+                               < r["prefill_tokens_page"] for r in mp)))
+            checks.append(("mid-page divergence: full-page caching scores "
+                           "zero hits, token-level reuses the shared span "
+                           "via partial-page COW",
+                           all(r["hit_rate_page"] == 0
+                               and r["hit_rate_token"] > 0
+                               and r["n_partial_hits"] > 0 for r in mp)))
+            checks.append(("greedy streams bit-identical across cache "
+                           "granularities",
+                           all(r["tokens_match"] for r in mp)))
         f10 = by("fig10_elapsed")
         if f10:
             big = f10[-1]
@@ -135,6 +156,7 @@ def main() -> None:
                            all(r["n_done"] == r["n_requests"]
                                and r["n_reclaims"] > 0
                                for r in by("policy_sweep"))))
+    if checks:
         print("\n== paper-claim validation ==")
     ok = True
     for msg, passed in checks:
@@ -142,12 +164,14 @@ def main() -> None:
         ok &= bool(passed)
     if args.json:
         with open(args.json, "w") as f:
-            # ok is null when validation didn't run (--only): a partial
-            # run must not be machine-readable as "all claims passed"
+            # ok is null for a partial run (--only): its checks are
+            # recorded individually (the regression gate compares them),
+            # but the run must not be machine-readable as "ALL claims
+            # passed" when most suites never executed
             json.dump({"rows": all_rows,
                        "checks": [{"msg": m, "passed": bool(p)}
                                   for m, p in checks],
-                       "ok": bool(ok) if checks else None},
+                       "ok": bool(ok) if not args.only else None},
                       f, indent=1, default=str)
         print(f"wrote {args.json}")
     if not ok:

@@ -9,6 +9,12 @@ prefill tokens actually computed / cache hit rate — the cache-off arm is
 the PR-2 engine, the cache-on arm maps shared pages and prefills only
 the uncached tail.
 
+The **mid-page-divergence** scenario isolates cache *granularity*: every
+prompt shares ``page_size - 1`` tokens and then diverges — full-page
+caching (``prefix_cache_granularity="page"``) scores ~0 hits (no
+complete page is ever shared), token-level caching ("token") COWs the
+partially-matched page and reuses nearly the whole shared span.
+
     PYTHONPATH=src python -m benchmarks.shared_prefix [--smoke] [--mode M]
 """
 import argparse
@@ -38,16 +44,74 @@ def _requests(n_req, k, vocab, seed=0):
     ]
 
 
-def _run(model, params, mode, k, cache, *, n_req=N_REQ):
+def _run(model, params, mode, k, cache, *, n_req=N_REQ, granularity="token"):
     sc = serve_cfg(mode, n_requests=n_req,
                    input_tokens=SYS_TOKENS + TAIL_TOKENS,
                    output_tokens=OUTPUT, max_batch=4, n_streams=2,
                    prefill_chunk=16)
-    sc = dataclasses.replace(sc, enable_prefix_cache=cache)
+    sc = dataclasses.replace(sc, enable_prefix_cache=cache,
+                             prefix_cache_granularity=granularity)
     eng = Engine(model, params, sc)
     reqs = _requests(n_req, k, model.cfg.vocab_size)
     s = eng.run(reqs, max_steps=20_000).summary()
     return s, reqs
+
+
+# --------------------------------------------- mid-page divergence arm ----
+MID_PAGE, MID_TAIL, MID_N = 16, 9, 6   # prompts share MID_PAGE - 1 tokens:
+                                       # divergence lands inside page one
+
+
+def _midpage_requests(n_req, vocab, page_size, seed=3):
+    """Prompts sharing ``page_size - 1`` tokens, then unique: no full page
+    is ever common, so page-granular caching can't score a single hit."""
+    rng = np.random.RandomState(seed)
+    shared = list(rng.randint(2, vocab, size=page_size - 1))
+    return [
+        Request(rid=i,
+                prompt=shared + list(rng.randint(2, vocab, size=MID_TAIL)),
+                sampling=SamplingParams(max_new_tokens=OUTPUT))
+        for i in range(n_req)
+    ]
+
+
+def midpage_rows(*, mode=MODE, n_req=MID_N):
+    """``midpage_divergence`` cells (granularity page vs token) plus a
+    ``midpage_delta`` summary row; greedy streams must match across arms."""
+    model, params = model_and_params("opt-125m")
+    out, cells, streams = [], {}, {}
+    for gran in ("page", "token"):
+        sc = serve_cfg(mode, n_requests=n_req,
+                       input_tokens=MID_PAGE - 1 + MID_TAIL,
+                       output_tokens=OUTPUT, max_batch=4, n_streams=2,
+                       prefill_chunk=16, page_size=MID_PAGE)
+        sc = dataclasses.replace(sc, enable_prefix_cache=True,
+                                 prefix_cache_granularity=gran)
+        eng = Engine(model, params, sc)
+        reqs = _midpage_requests(n_req, model.cfg.vocab_size, sc.page_size)
+        s = eng.run(reqs, max_steps=20_000).summary()
+        cells[gran], streams[gran] = s, [r.out_tokens for r in reqs]
+        out.append(dict(
+            bench="midpage_divergence", x=f"{mode}/{gran}",
+            n_requests=n_req, n_done=s["n_done"],
+            all_complete=all(len(r.out_tokens) == OUTPUT for r in reqs),
+            prefill_tokens=s["prefill_tokens_computed"],
+            cached_tokens=s["cached_tokens"],
+            hit_rate=round(s["cache_hit_rate"], 4),
+            n_partial_hits=s["n_partial_hits"],
+            n_cow=s["n_cow"],
+        ))
+    page, token = cells["page"], cells["token"]
+    out.append(dict(
+        bench="midpage_delta", x=mode,
+        prefill_tokens_page=page["prefill_tokens_computed"],
+        prefill_tokens_token=token["prefill_tokens_computed"],
+        hit_rate_page=round(page["cache_hit_rate"], 4),
+        hit_rate_token=round(token["cache_hit_rate"], 4),
+        n_partial_hits=token["n_partial_hits"],
+        tokens_match=streams["page"] == streams["token"],
+    ))
+    return out
 
 
 def rows(*, n_req=N_REQ, k_sweep=K_SWEEP, mode=MODE):
@@ -85,6 +149,7 @@ def rows(*, n_req=N_REQ, k_sweep=K_SWEEP, mode=MODE):
             hit_rate_on=round(on["cache_hit_rate"], 4),
             tokens_match=None,   # cross-arm equality asserted by tests
         ))
+    out.extend(midpage_rows(mode=mode))
     return out
 
 
@@ -105,10 +170,20 @@ def main():
             "greedy outputs diverge with prefix cache on"
         assert on["cache_hit_rate"] > 0, "no cache hits on K=1 workload"
         assert on["prefill_tokens_computed"] < off["prefill_tokens_computed"]
+        delta = [r for r in midpage_rows(mode=args.mode)
+                 if r["bench"] == "midpage_delta"][0]
+        assert delta["tokens_match"], \
+            "greedy outputs diverge across cache granularities"
+        assert delta["prefill_tokens_token"] < delta["prefill_tokens_page"], \
+            "token-level caching did not beat full-page on mid-page divergence"
+        assert delta["hit_rate_page"] == 0 and delta["n_partial_hits"] > 0
         print(f"smoke ok: hit_rate={on['cache_hit_rate']:.3f} "
               f"prefill {off['prefill_tokens_computed']}"
               f"->{on['prefill_tokens_computed']} "
-              f"kv_peak {off['kv_usage_peak']:.3f}->{on['kv_usage_peak']:.3f}")
+              f"kv_peak {off['kv_usage_peak']:.3f}->{on['kv_usage_peak']:.3f} "
+              f"midpage prefill {delta['prefill_tokens_page']}"
+              f"->{delta['prefill_tokens_token']} "
+              f"(partial_hits={delta['n_partial_hits']})")
         return
     for r in rows(mode=args.mode):
         print(r)

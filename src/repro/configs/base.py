@@ -153,6 +153,11 @@ class ServeConfig:
                                     # cache_aware: co-schedule resident
                                     #   prefixes, hold twins of in-flight
                                     #   prefills one round so they hit
+    admission_age_weight: float = 0.5  # cache_aware aging: resident-prefix
+                                    # page advantage one waited round
+                                    # offsets, so a cold-prefix request
+                                    # cannot starve behind a hot-template
+                                    # stream (0 = pure hit-first order)
     eviction_policy: Optional[str] = None  # reclaimable prefix-page strip
                                     # order: lru | fifo | cost (recompute-
                                     # FLOPs model); None inherits
@@ -171,6 +176,10 @@ class ServeConfig:
     enable_prefix_cache: bool = False   # refcounted copy-on-write page sharing
     prefix_cache_policy: str = "lru"    # legacy alias for eviction_policy
                                         # (lru | fifo | cost)
+    prefix_cache_granularity: str = "token"  # token: partial-page (mid-page
+                                        # divergence) reuse via COW of the
+                                        # tail page; page: full pages only
+                                        # (PR-3 behaviour)
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
@@ -195,6 +204,14 @@ class ServeConfig:
             raise ValueError(
                 f"unknown preempt_policy {self.preempt_policy!r}; supported: "
                 f"{', '.join(sorted(PREEMPT_POLICIES))}, none")
+        if self.prefix_cache_granularity not in ("page", "token"):
+            raise ValueError(
+                f"unknown prefix_cache_granularity "
+                f"{self.prefix_cache_granularity!r}; supported: page, token")
+        if self.admission_age_weight < 0:
+            raise ValueError(
+                f"admission_age_weight must be >= 0, got "
+                f"{self.admission_age_weight}")
         if self.sched_events_cap <= 0:
             raise ValueError(
                 f"sched_events_cap must be positive, got {self.sched_events_cap}")

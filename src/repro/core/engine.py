@@ -44,7 +44,11 @@ hit pages are refcount-mapped into the request's block table and prefill
 starts at the first uncached token — ``sequential`` computes only the
 suffix through the paged mixed kernel, the splitwiser modes fast-forward
 their streams past cached chunks, and preempted victims resume by
-remapping their own just-freed pages.
+remapping their own just-freed pages.  At token granularity
+(``prefix_cache_granularity="token"``, the default) a prompt that
+diverges *inside* a page still reuses the matched span: the partially
+matched page is copy-on-write copied into the request's table and
+prefill starts mid-page, recomputing zero matched tokens.
 
 Scheduling decisions — admission order, reclaimable-page eviction,
 preemption victim choice — are pluggable policies (``core/policies.py``,
@@ -345,9 +349,13 @@ class Engine:
                    if self.alloc.ref_count(p) >= (2 if p in owned else 1))
 
     def _cache_match(self, tokens: List[int]):
-        """(n_cached_tokens, hit_pages) for ``tokens``.
+        """(n_cached_tokens, hit_pages, partial) for ``tokens``.
 
-        Hits are full-page-granular and capped at least one token below
+        ``hit_pages`` are full-page hits shared in place; ``partial`` is
+        ``(donor_page, n_matched)`` when — at token granularity — the
+        match continues *inside* a cached page, reused via a COW copy
+        (``PageAllocator.cow_partial``) so no matched token is ever
+        recomputed.  The total span is capped at least one token below
         the prefill length: the engine always recomputes the final token
         (it needs its logits to sample from), so cached spans never reach
         a position the engine will write — shared pages stay read-only on
@@ -355,49 +363,103 @@ class Engine:
         rest).
         """
         if self.prefix_cache is None:
-            return 0, []
-        pages = self.prefix_cache.match(tokens)
-        cap = (len(tokens) - 1) // self.serve.page_size
-        pages = pages[:cap]
-        return len(pages) * self.serve.page_size, pages
+            return 0, [], None
+        ps = self.serve.page_size
+        token_level = self.serve.prefix_cache_granularity == "token"
+        if token_level:
+            pages, partial = self.prefix_cache.match_tokens(tokens)
+        else:
+            pages, partial = self.prefix_cache.match(tokens), None
+        cap_tokens = len(tokens) - 1
+        cap_pages = cap_tokens // ps
+        if len(pages) > cap_pages:
+            # the whole prompt is cached: the capped-off page still serves
+            # the tokens up to the cap as a partial donor
+            t = cap_tokens - cap_pages * ps
+            partial = ((pages[cap_pages], t)
+                       if token_level and t > 0 else None)
+            pages = pages[:cap_pages]
+        elif partial is not None:
+            t = min(partial[1], cap_tokens - len(pages) * ps)
+            partial = (partial[0], t) if t > 0 else None
+        n = len(pages) * ps + (partial[1] if partial else 0)
+        return n, pages, partial
 
     def cache_probe(self, req: Request):
-        """One trie walk answering both admission questions:
-        ``(n_hit, n_free)`` — pages of ``req``'s next prefill the cache
-        would serve (remap instead of recompute), and the subset of those
-        already referenced by a live request, which are *budget-free*.
-        The scheduler charges everything else — misses AND reclaimable
-        hits, since reviving a parked page consumes free capacity just
-        like a fresh allocation (it only saves the recompute)."""
-        pages = self._cache_match(req.prefill_tokens)[1]
-        return len(pages), sum(1 for p in pages if self.alloc.is_referenced(p))
+        """One trie walk answering the admission questions:
+        ``(n_hit, n_free, cow_extra)`` — pages of ``req``'s next prefill
+        the cache would serve (remap instead of recompute), the subset of
+        those already referenced by a live request, which are
+        *budget-free*, and a transient extra page to reserve when a
+        token-level partial hit must revive an unreferenced donor while
+        its COW copy is prepared (the donor parks reclaimable again once
+        the copy exists, but both hold capacity for a moment).  The
+        scheduler charges everything else — misses AND reclaimable hits,
+        since reviving a parked page consumes free capacity just like a
+        fresh allocation (it only saves the recompute)."""
+        _, pages, partial = self._cache_match(req.prefill_tokens)
+        cow_extra = int(partial is not None
+                        and not self.alloc.is_referenced(partial[0]))
+        return (len(pages),
+                sum(1 for p in pages if self.alloc.is_referenced(p)),
+                cow_extra)
 
     def _map_cached(self, req: Request) -> int:
-        """Admission-time cache consult: map hit pages into the request's
-        refcounted ownership and return the cached token count.  Prefill
-        then starts at the first uncached token."""
-        n, pages = self._cache_match(req.prefill_tokens)
-        if n:
+        """Admission-time cache consult: map full-page hits into the
+        request's refcounted ownership, materialize a token-level partial
+        hit as a private COW copy of its donor page, and return the exact
+        cached token count.  Prefill then starts at the first uncached
+        token — possibly mid-page."""
+        n, pages, partial = self._cache_match(req.prefill_tokens)
+        if pages:
             self.alloc.share(req.rid, pages)
             self.prefix_cache.touch(pages)
+        if partial is not None:
+            donor, _ = partial
+            # the copy needs a destination page now, plus the transient
+            # revive of an unreferenced donor; admission budgets this
+            # (cache_probe cow_extra), but the bare-fit progress override
+            # doesn't — degrade to a miss on the partial span instead of
+            # raising OutOfPages mid-admission
+            headroom = 1 + (0 if self.alloc.is_referenced(donor) else 1)
+            if self.alloc.n_free >= headroom:
+                pair = self.alloc.cow_partial(req.rid, donor)
+                self.prefix_cache.touch([donor])
+                self._apply_cow([pair])
+                self.metrics.n_partial_hits += 1
+            else:
+                n = len(pages) * self.serve.page_size
+        if n:
             self.metrics.req(req.rid).n_cached_tokens += n
             self.metrics.n_cached_tokens += n
         return n
 
-    def cache_insert(self, req: Request, n_committed: int) -> None:
-        """Register ``req``'s committed-KV full pages with the cache.
+    def cache_insert(self, req: Request, n_committed: int,
+                     final: bool = False) -> None:
+        """Register ``req``'s committed-KV pages with the cache.
 
         Called after prefill work lands, at finish, and at preemption
         (scheduler) — the last one is what turns a preempted victim's
         recompute-on-resume into a remap of its own just-freed pages.
+        Mid-flight inserts register full pages only (the tail page is
+        still being written); ``final`` inserts — finish and preemption,
+        where nothing will write into the tail again — also register the
+        partial tail page at token granularity, so a future prompt that
+        diverges inside it still reuses the matched span via COW.
         """
         if self.prefix_cache is None:
             return
-        n_full = n_committed // self.serve.page_size
-        if n_full <= 0:
+        ps = self.serve.page_size
+        n_full, rem = divmod(n_committed, ps)
+        partial_tail = (final and rem > 0
+                        and self.serve.prefix_cache_granularity == "token")
+        n_pages = n_full + (1 if partial_tail else 0)
+        if n_pages <= 0:
             return
-        tokens = (req.prompt + req.out_tokens)[: n_full * self.serve.page_size]
-        self.prefix_cache.insert(tokens, self.alloc.owned(req.rid)[:n_full])
+        n_tokens = n_committed if partial_tail else n_full * ps
+        tokens = (req.prompt + req.out_tokens)[:n_tokens]
+        self.prefix_cache.insert(tokens, self.alloc.owned(req.rid)[:n_pages],
+                                 allow_partial=partial_tail)
 
     def _apply_cow(self, pairs) -> None:
         """Materialize allocator copy-on-write decisions on the device
@@ -416,6 +478,7 @@ class Engine:
             enabled=int(self.prefix_cache is not None),
             n_reclaims=self.alloc.n_reclaims,
             n_cow=self.alloc.n_cow,
+            n_partial_cow=self.alloc.n_partial_cow,
             n_shared_maps=self.alloc.n_shared_maps,
             pages_shared=self.alloc.n_pages_shared,
             pages_shared_peak=self._pages_shared_peak,
@@ -514,7 +577,9 @@ class Engine:
         """Prefill (request, n_cached) pairs from their first uncached
         token: hit pages are already mapped into ownership, the suffix
         chunk attends to them through the paged mixed kernel
-        (``p_start > 0``), and only suffix pages are freshly allocated."""
+        (``p_start > 0`` — with token-level reuse the start may sit
+        mid-page, inside the COW-copied donor), and only suffix pages
+        are freshly allocated."""
         ps = self.serve.page_size
         t0 = self.now()
         P = len(hits)
@@ -601,7 +666,8 @@ class Engine:
         m.finish_reason = reason
         # register committed KV before freeing: the pages park on the
         # cache's reclaimable list and keep serving identical prefixes
-        self.cache_insert(req, n_committed)
+        # (final: the partial tail page is reusable too)
+        self.cache_insert(req, n_committed, final=True)
         self.alloc.free(req.rid)
         self._outputs.append(RequestOutput(
             rid=req.rid, prompt=list(req.prompt), tokens=list(req.out_tokens),

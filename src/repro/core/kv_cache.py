@@ -10,8 +10,10 @@ attached, byte-identical prefixes across requests map to the *same*
 pages (``share``), a cached page whose refcount drops to zero parks on
 the cache's reclaimable list instead of the free list (still serving
 future hits, stripped leaf-first under pressure before the scheduler
-preempts anyone), and ``prepare_write`` copy-on-writes a shared or
-cached page before a token write would mutate it.
+preempts anyone), ``prepare_write`` copy-on-writes a shared or cached
+page before a token write would mutate it, and ``cow_partial`` turns a
+token-level (partial-page) cache hit into a private copy of the donor
+page so the matched span is reused without recomputation.
 
 Page N-1 is reserved as the trash page (inactive batch slots scatter
 there); it is never allocated.
@@ -41,6 +43,7 @@ class PageAllocator:
     n_reclaims: int = 0      # cached pages stripped back into the free list
     n_cow: int = 0           # copy-on-write page splits
     n_shared_maps: int = 0   # cache-hit pages mapped via share()
+    n_partial_cow: int = 0   # token-level (partial-page) hit copies
 
     def __post_init__(self):
         # last page reserved as trash
@@ -172,6 +175,27 @@ class PageAllocator:
             self.n_cow += 1
             self._event("cow", rid=rid, src=p, dst=new)
         return pairs
+
+    def cow_partial(self, rid: int, src: int) -> Tuple[int, int]:
+        """Token-level prefix reuse: map a private copy of cached page
+        ``src`` into ``rid``'s table as its next page.
+
+        The donor page cannot be shared in place — the request's own
+        suffix diverges inside it — so it is referenced first (a
+        reclaimable donor is revived, protecting it from being stripped
+        while the copy is prepared) and then routed through the standard
+        ``prepare_write`` copy-on-write, which restores the donor's
+        refcount (a zero-ref donor parks reclaimable again) and hands
+        ``rid`` a private page.  Returns the ``(src, dst)`` pair whose
+        device contents the engine must copy before prefilling the
+        uncached remainder of the page.
+        """
+        self.share(rid, [src])
+        idx = len(self._owned[rid]) - 1
+        pairs = self.prepare_write(rid, idx * self.page_size, 1)
+        assert len(pairs) == 1 and pairs[0][0] == src, (pairs, src)
+        self.n_partial_cow += 1
+        return pairs[0]
 
     def owned(self, rid: int) -> List[int]:
         return self._owned.get(rid, [])

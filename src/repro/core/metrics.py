@@ -109,6 +109,9 @@ class EngineMetrics:
     # --- prefill accounting (shared-prefix cache) ---
     n_prefill_tokens: int = 0    # prefill tokens actually computed
     n_cached_tokens: int = 0     # prefill tokens skipped via cache hits
+                                 # (token-exact: partial-page spans count)
+    n_partial_hits: int = 0      # admissions that reused a partial page
+                                 # via token-level COW
     # allocator/cache counters snapshot, refreshed by the engine each step:
     # {"n_reclaims", "n_cow", "n_shared_maps", "pages_shared", ...}
     prefix_cache_stats: Dict[str, int] = field(default_factory=dict)
@@ -157,6 +160,7 @@ class EngineMetrics:
             "cache_hit_rate": (
                 self.n_cached_tokens
                 / max(self.n_cached_tokens + self.n_prefill_tokens, 1)),
+            "n_partial_hits": self.n_partial_hits,
             "pages_shared_peak": self.prefix_cache_stats.get("pages_shared_peak", 0),
             "n_reclaims": self.prefix_cache_stats.get("n_reclaims", 0),
             "n_cow": self.prefix_cache_stats.get("n_cow", 0),

@@ -24,7 +24,11 @@ Admission (:class:`AdmissionPolicy` — ``serve.admission_policy``)
                     is currently being prefilled by an in-flight request
                     (the engine's in-flight registry): it waits one round
                     and hits, instead of double-missing alongside the
-                    twin that is about to insert its pages.
+                    twin that is about to insert its pages.  Every round
+                    a request is passed over adds
+                    ``serve.admission_age_weight`` to its score, bounding
+                    the worst-case wait of a cold-prefix request under a
+                    hot-template stream (no starvation).
 
 Eviction (:class:`EvictionPolicy` — ``serve.eviction_policy``)
     Ranks the prefix cache's reclaimable zero-ref *leaf* pages; the
@@ -95,7 +99,13 @@ class CacheAwareAdmission(AdmissionPolicy):
     ``order``: resident-hit pages sort first (descending, one trie walk
     per waiting request via ``Engine.cache_probe``), FCFS
     ``(arrival, rid)`` breaks ties — so a zero-hit queue degenerates to
-    exact FCFS.  ``holds``: a request is skipped for the round when some
+    exact FCFS.  Each round a request waits adds
+    ``serve.admission_age_weight`` pages to its effective score
+    (``Scheduler.wait_rounds``), so a cold-prefix request passed over by
+    a sustained hot-template stream eventually outranks the hits and its
+    worst-case wait is bounded — with weight 0 the order is pure
+    hit-first (and a cold request CAN starve under an open-loop hot
+    stream).  ``holds``: a request is skipped for the round when some
     in-flight prefill (including one admitted earlier in this same
     round) will cache strictly more of its prefix than is resident now —
     admitting it would double-miss work its twin is already computing.
@@ -108,7 +118,9 @@ class CacheAwareAdmission(AdmissionPolicy):
     name = "cache_aware"
 
     def order(self, sched) -> List:
-        ranked = [(-sched.probe(r)[0], r.arrival, r.rid, r)
+        w = sched.serve.admission_age_weight
+        ranked = [(-(sched.probe(r)[0] + w * sched.wait_rounds(r.rid)),
+                   r.arrival, r.rid, r)
                   for r in sched.waiting]
         ranked.sort(key=lambda t: t[:3])
         out = [t[3] for t in ranked]

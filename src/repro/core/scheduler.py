@@ -20,7 +20,10 @@ Admission (watermark-based, ``max_new_tokens``-aware)
     ``AdmissionPolicy``'s call: ``fcfs`` walks the queue in arrival
     order; ``cache_aware`` co-schedules resident prefixes first and
     holds a request whose prefix an in-flight prefill is about to cache
-    (it waits one round and remaps instead of double-missing).
+    (it waits one round and remaps instead of double-missing), with an
+    age-weighted score (``serve.admission_age_weight`` per passed-over
+    round, tracked here in ``wait_rounds``) so cold-prefix requests
+    cannot starve behind a hot-template stream.
     Head-of-line progress guarantee: when nothing holds pages, the first
     considered request is admitted whenever its bare prompt fits — and
     if even that exceeds the pool, :class:`OutOfPages` is raised eagerly
@@ -76,8 +79,12 @@ class Scheduler:
         self.metrics = engine.metrics
         self.waiting: Deque = deque()
         self._round_probes: dict = {}   # rid -> cache_probe, one round only
+        # rid -> admission rounds the request has been passed over; feeds
+        # cache_aware aging (serve.admission_age_weight) so a cold-prefix
+        # request cannot starve behind a hot-template stream
+        self._wait_rounds: dict = {}
 
-    def probe(self, req) -> Tuple[int, int]:
+    def probe(self, req) -> Tuple[int, int, int]:
         """``Engine.cache_probe`` memoized for the current admission
         round (the trie and page references don't change mid-round, and
         policy ordering, hold checks and budgeting would otherwise each
@@ -86,6 +93,12 @@ class Scheduler:
         if hit is None:
             hit = self._round_probes[req.rid] = self.eng.cache_probe(req)
         return hit
+
+    def wait_rounds(self, rid: int) -> int:
+        """Admission rounds ``rid`` has been passed over while waiting
+        (reset on admission) — the age signal policies weight against
+        resident-prefix advantage."""
+        return self._wait_rounds.get(rid, 0)
 
     # ------------------------------------------------------------ queue ----
     def submit(self, req) -> None:
@@ -100,7 +113,8 @@ class Scheduler:
     def watermark_pages(self) -> int:
         return int(math.ceil(self.serve.watermark * (self.alloc.n_pages - 1)))
 
-    def admission_pages(self, req, free_cached: int = 0) -> int:
+    def admission_pages(self, req, free_cached: int = 0,
+                        cow_extra: int = 0) -> int:
         """Pages to budget for admitting `req`: prompt (plus any tokens
         generated before a preemption) + 1, plus `decode_reserve` of the
         remaining generation as decode headroom.  The generation budget
@@ -111,13 +125,17 @@ class Scheduler:
         budgeted: ``free_cached`` (live-referenced hit pages, from
         ``Engine.cache_probe``) don't come out of the free pool, while
         reclaimable hits are charged like fresh allocs — reviving them
-        consumes free capacity.
+        consumes free capacity.  ``cow_extra`` charges the transient
+        page a token-level partial hit holds while its unreferenced
+        donor is revived for the COW copy (the copy's destination page
+        is already inside ``pages_needed``; the donor returns to the
+        reclaimable pool once the copy exists).
         """
         remaining = max(req.sampling.max_new_tokens - len(req.out_tokens), 1)
         headroom = int(self.serve.decode_reserve * (remaining - 1))
         n_prefill = len(req.prompt) + len(req.out_tokens)
         need = self.alloc.pages_needed(n_prefill + 1 + headroom)
-        return max(need - free_cached, 0)
+        return max(need - free_cached, 0) + cow_extra
 
     def _bare_pages(self, req) -> int:
         """Minimum pages the request needs to start; raises if the pool
@@ -145,13 +163,14 @@ class Scheduler:
         budget says no (otherwise a big request could wait forever
         behind its own reservation)."""
         bare = self._bare_pages(r)      # raises when it can never fit
-        n_hit, n_free_hit = self.probe(r)
-        need = self.admission_pages(r, n_free_hit)
+        n_hit, n_free_hit, cow_extra = self.probe(r)
+        need = self.admission_pages(r, n_free_hit, cow_extra)
         if need > budget:
             if not (first and self.alloc.n_allocated == 0):
                 return False, budget
             need = bare
         self.waiting.remove(r)
+        self._wait_rounds.pop(r.rid, None)
         self.eng.register_inflight(r)
         self._event("admit", r.rid, pages=need, cached_pages=n_hit,
                     resumed=bool(r.out_tokens))
@@ -177,6 +196,8 @@ class Scheduler:
             if not ok:
                 break
             out.append(r)
+        for r in self.waiting:          # passed over this round: age them
+            self._wait_rounds[r.rid] = self._wait_rounds.get(r.rid, 0) + 1
         return out
 
     def take_prefillable(self) -> List:
@@ -260,7 +281,7 @@ class Scheduler:
         # (recomputation becomes a cheap remap unless pressure reclaimed
         # them in the meantime)
         committed = victim.seq_len if kind == "slot" else victim.pos
-        self.eng.cache_insert(r, committed)
+        self.eng.cache_insert(r, committed, final=True)
         self.eng.unregister_inflight(r.rid)
         freed = self.alloc.free(r.rid)
         self.requeue(r)

@@ -1,0 +1,106 @@
+"""Benchmark-regression gate logic (benchmarks/regression_gate.py).
+
+The CI acceptance bar: the gate must pass on an identical re-run and
+fail on an injected hit-rate (or token-count / completion) regression,
+while ignoring timing-dependent fields entirely.
+"""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.regression_gate import compare
+
+BASELINE = {
+    "rows": [
+        {"bench": "shared_prefix", "x": "mps/K=1/cache", "n_done": 8,
+         "all_complete": True, "prefill_tokens": 128, "cached_tokens": 96,
+         "hit_rate": 0.42, "throughput_tok_s": 1234.5},
+        {"bench": "midpage_delta", "x": "mps", "prefill_tokens_page": 144,
+         "prefill_tokens_token": 84, "hit_rate_page": 0.0,
+         "hit_rate_token": 0.41, "n_partial_hits": 4, "tokens_match": True},
+    ],
+    "checks": [{"msg": "token beats page", "passed": True}],
+    "ok": True,
+}
+
+
+def test_identical_run_passes():
+    assert compare(BASELINE, copy.deepcopy(BASELINE)) == []
+
+
+def test_injected_hit_rate_regression_fails():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["rows"][0]["hit_rate"] = 0.30
+    failures = compare(BASELINE, fresh)
+    assert len(failures) == 1 and "hit_rate" in failures[0]
+    # within tolerance: noise-level wiggle passes
+    fresh["rows"][0]["hit_rate"] = 0.41
+    assert compare(BASELINE, fresh) == []
+
+
+def test_count_and_completion_regressions_fail():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["rows"][0]["n_done"] = 7
+    fresh["rows"][0]["prefill_tokens"] = 200
+    fresh["rows"][1]["tokens_match"] = False
+    fresh["rows"][1]["n_partial_hits"] = 0
+    msgs = "\n".join(compare(BASELINE, fresh))
+    assert "n_done" in msgs and "prefill_tokens" in msgs
+    assert "tokens_match" in msgs and "n_partial_hits" in msgs
+
+
+def test_timing_fields_ignored():
+    fresh = copy.deepcopy(BASELINE)
+    fresh["rows"][0]["throughput_tok_s"] = 1.0     # 1000x slower: not gated
+    assert compare(BASELINE, fresh) == []
+
+
+def test_missing_scenario_and_flipped_check_fail():
+    fresh = copy.deepcopy(BASELINE)
+    del fresh["rows"][1]
+    fresh["checks"][0]["passed"] = False
+    msgs = compare(BASELINE, fresh)
+    assert any("missing" in m for m in msgs)
+    assert any("validation check now failing" in m for m in msgs)
+    # a check that vanishes (reworded/removed without a baseline refresh)
+    # fails just as loudly as a flipped one
+    fresh = copy.deepcopy(BASELINE)
+    fresh["checks"] = []
+    assert any("validation check missing" in m
+               for m in compare(BASELINE, fresh))
+    # new rows in fresh (no baseline yet) never fail
+    fresh = copy.deepcopy(BASELINE)
+    fresh["rows"].append({"bench": "new_scenario", "x": "y", "hit_rate": 0.0})
+    assert compare(BASELINE, fresh) == []
+
+
+def test_cli_exit_codes(tmp_path: Path):
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(BASELINE))
+    fresh = copy.deepcopy(BASELINE)
+    fresh["rows"][1]["hit_rate_token"] = 0.1
+    fresh_p = tmp_path / "fresh.json"
+    fresh_p.write_text(json.dumps(fresh))
+    repo = Path(__file__).resolve().parent.parent
+    ok = subprocess.run(
+        [sys.executable, "-m", "benchmarks.regression_gate",
+         str(base_p), str(base_p)], cwd=repo, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "benchmarks.regression_gate",
+         str(base_p), str(fresh_p)], cwd=repo, capture_output=True, text=True)
+    assert bad.returncode == 1 and "hit_rate_token" in bad.stdout
+
+
+def test_committed_baseline_is_self_consistent():
+    """The committed BENCH_baseline.json must parse and pass against
+    itself — catches hand-edits that would make every CI run red."""
+    repo = Path(__file__).resolve().parent.parent
+    with open(repo / "BENCH_baseline.json") as fp:
+        baseline = json.load(fp)
+    assert baseline["rows"], "baseline has no rows"
+    benches = {r["bench"] for r in baseline["rows"]}
+    assert {"shared_prefix", "midpage_divergence", "midpage_delta"} <= benches
+    assert compare(baseline, copy.deepcopy(baseline)) == []

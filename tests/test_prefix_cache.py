@@ -276,12 +276,13 @@ def test_cow_on_cached_exclusive_page_preserves_cache_content():
 
 
 # ------------------------------------------------------------ trie units ---
-def test_trie_partial_pages_never_cached():
+def test_trie_partial_tail_needs_explicit_opt_in():
     cache = PrefixCache(4)
     alloc = PageAllocator(16, 4, cache=cache)
     pages = alloc.alloc(1, 2)
-    # 6 tokens = 1 full page + a partial tail: only the full page may be
-    # inserted (callers trim; the trie enforces the invariant)
+    # 6 tokens = 1 full page + a partial tail: mid-flight inserts must
+    # trim to full pages (the tail is still being written); only
+    # terminal inserts may register it (token-level reuse opt-in)
     with pytest.raises(AssertionError):
         cache.insert(list(range(6)), pages)
     cache.insert(list(range(4)), pages[:1])

@@ -1,7 +1,9 @@
 """Hypothesis property tests: PrefixCache + PageAllocator invariants.
 
-Random interleavings of the engine's cache lifecycle — insert, match,
-share, alloc (with reclaim), copy-on-write, free — must never violate:
+Random interleavings of the engine's cache lifecycle — insert (full and
+partial-tail), match (page- and token-level), share, partial-page COW
+(``cow_partial``), alloc (with reclaim), copy-on-write, free — must
+never violate:
 
 * refcounts stay positive (zero-ref entries leave the table entirely);
 * page conservation: every usable page is in exactly one of
@@ -9,9 +11,15 @@ share, alloc (with reclaim), copy-on-write, free — must never violate:
   ``reclaimable + live == allocated-from-free-list`` and
   ``n_free + len(_ref) == n_pages - 1``;
 * trie structure: parent-before-child (every non-root node's parent is
-  live and was created first) and consistent child/descendant counts —
-  a reclaimable-leaf pop never orphans a chain.
+  live and was created first), consistent child/descendant counts, and
+  explicit child links mirroring the node table exactly — a
+  reclaimable-leaf pop never orphans a chain;
+* granularity: partial nodes (``n_valid < page_size``) are always
+  leaves, and a token-level match never claims tokens beyond a node's
+  valid span.
 """
+import os
+
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
@@ -20,6 +28,14 @@ from hypothesis import given, settings, strategies as st
 from repro.core.kv_cache import OutOfPages, PageAllocator
 from repro.core.policies import make_eviction
 from repro.core.prefix_cache import PrefixCache
+
+# "ci" profile (HYPOTHESIS_PROFILE=ci): fixed seed, no deadline — property
+# tests cannot time out or flake on slow shared runners; locally the
+# default profile keeps full randomized exploration.
+settings.register_profile(
+    "ci", max_examples=40, deadline=None, derandomize=True,
+    database=None, print_blob=False)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
 
 PS = 4
 
@@ -59,6 +75,24 @@ def _check_invariants(alloc: PageAllocator, cache: PrefixCache):
     for node in cache._nodes.values():
         assert node.n_children == n_children.get(node.nid, 0)
         assert node.n_desc == n_desc_leafward.get(node.nid, 0)
+    # explicit child links mirror the node table exactly: every node is
+    # linked from its parent (or the root map) under its own chunk, and
+    # no link points at a dead node
+    linked = {id(n) for n in cache._roots.values()}
+    for node in cache._nodes.values():
+        for chunk, child in node.children.items():
+            assert child.parent is node and child.key == (node.nid, chunk)
+            linked.add(id(child))
+    assert linked == {id(n) for n in cache._nodes.values()}
+    for chunk, node in cache._roots.items():
+        assert node.parent is None and node.key == (0, chunk)
+    # valid-token lengths: full nodes fill their page, partial nodes are
+    # strictly shorter AND always leaves (nothing can chain past a page
+    # whose tail was never written)
+    for node in cache._nodes.values():
+        assert 1 <= node.n_valid <= cache.page_size
+        if node.n_valid < cache.page_size:
+            assert not node.children
     # reclaimable nodes are cached, zero-ref
     for page, node in cache._reclaimable.items():
         assert cache._by_page[page] is node
@@ -91,20 +125,36 @@ def test_cache_lifecycle_interleavings_preserve_invariants(data):
                 data.draw(st.integers(0, 2 * PS)))]
             tokens = list(t) + tail
             rid = next_rid = next_rid + 1
-            hit = cache.match(tokens)
-            need = alloc.pages_needed(len(tokens)) - len(hit)
-            if not alloc.can_alloc(need + len(hit)):
+            hit, partial = cache.match_tokens(tokens)
+            use_partial = (partial is not None
+                           and alloc.pages_needed(len(tokens)) > len(hit)
+                           and data.draw(st.booleans()))
+            need = (alloc.pages_needed(len(tokens)) - len(hit)
+                    - (1 if use_partial else 0))
+            # budget like the scheduler: hits + misses + the COW copy,
+            # plus the transient revive of an unreferenced donor
+            extra = (1 + (0 if alloc.is_referenced(partial[0]) else 1)
+                     if use_partial else 0)
+            if not alloc.can_alloc(need + len(hit) + extra):
                 continue            # admission rejected: no state change
             alloc.share(rid, hit)   # hits first, so they can't be reclaimed
             cache.touch(hit)        # out from under the request
+            if use_partial:
+                alloc.cow_partial(rid, partial[0])
+                cache.touch([partial[0]])
             if need:
                 alloc.alloc(rid, need)
             live[rid] = tokens
         elif op == "finish" and live:
             rid = data.draw(st.sampled_from(sorted(live)))
             tokens = live.pop(rid)
-            n_full = len(tokens) // PS
-            if n_full:
+            n_full, rem = divmod(len(tokens), PS)
+            if rem and data.draw(st.booleans()):
+                # terminal insert at token granularity: the partial tail
+                # page registers as a leaf (engine: cache_insert(final))
+                cache.insert(tokens, alloc.owned(rid)[:n_full + 1],
+                             allow_partial=True)
+            elif n_full:
                 cache.insert(tokens[: n_full * PS],
                              alloc.owned(rid)[:n_full])
             alloc.free(rid)
@@ -122,6 +172,17 @@ def test_cache_lifecycle_interleavings_preserve_invariants(data):
             t = data.draw(st.sampled_from(templates))
             pages = cache.match(t)
             assert len(pages) <= len(t) // PS
+            # token-level lookup: the partial continuation (if any) is a
+            # strict sub-page span of a live cached page
+            pages2, partial = cache.match_tokens(t)
+            assert pages2 == pages
+            if partial is not None:
+                page, n = partial
+                node = cache._by_page[page]
+                assert 1 <= n <= min(node.n_valid,
+                                     len(t) - len(pages) * PS)
+                assert list(node.key[1][:n]) == list(
+                    t[len(pages) * PS: len(pages) * PS + n])
         _check_invariants(alloc, cache)
     # drain everything: the pool must be whole again
     for rid in sorted(live):

@@ -1,0 +1,266 @@
+"""Token-level (partial-page) prefix reuse.
+
+The contract under test: with ``prefix_cache_granularity="token"`` a
+prompt that diverges *inside* a page still reuses every matched token —
+the partially-matched page is COW-copied into the request's table and
+prefill starts mid-page — while greedy streams stay bit-identical with
+the cache off, and the full-page ("page") granularity keeps the PR-3
+behaviour.  Budgeting: admission charges the transient page a partial
+hit holds while its unreferenced donor is revived for the copy.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import ServeConfig
+from repro.core.engine import Engine, Request, SamplingParams
+from repro.core.kv_cache import PageAllocator
+from repro.core.prefix_cache import PrefixCache
+
+ARCH = "qwen3-0.6b"
+MODES = ["sequential", "splitwiser", "splitwiser_mps"]
+PS = 4
+BASE = ServeConfig(max_batch=4, page_size=PS, n_pages=128,
+                   max_pages_per_seq=16, prefill_chunk=PS, n_streams=2,
+                   enable_prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _midpage_requests(vocab, n=5, shared=PS - 1, tail=5, out=6, seed=1):
+    """Prompts sharing ``shared`` (< page_size) tokens then diverging:
+    full-page caching can never score a hit."""
+    rng = np.random.RandomState(seed)
+    sys_toks = list(rng.randint(2, vocab, size=shared))
+    return [Request(rid=i,
+                    prompt=sys_toks + list(rng.randint(2, vocab, size=tail)),
+                    sampling=SamplingParams(max_new_tokens=out))
+            for i in range(n)]
+
+
+# ------------------------------------------------------------ trie units ---
+def test_match_tokens_returns_best_partial_overlap():
+    cache = PrefixCache(PS)
+    alloc = PageAllocator(16, PS, cache=cache)
+    p = alloc.alloc(1, 2)
+    cache.insert(list(range(8)), p)
+    # diverge inside the second page: full chain + partial donor
+    pages, partial = cache.match_tokens([0, 1, 2, 3, 4, 5, 99, 100])
+    assert pages == p[:1] and partial == (p[1], 2)
+    # diverge inside the first page: no full pages, root-level partial
+    pages, partial = cache.match_tokens([0, 1, 77])
+    assert pages == [] and partial == (p[0], 2)
+    # disjoint: nothing
+    assert cache.match_tokens([9, 9, 9, 9]) == ([], None)
+    # among siblings the longest overlap wins
+    q = alloc.alloc(2, 1)
+    cache.insert([0, 1, 2, 9], q)
+    pages, partial = cache.match_tokens([0, 1, 2, 9, 9])
+    assert pages == q      # exact full-page match beats any partial
+    pages, partial = cache.match_tokens([0, 1, 2, 8])
+    assert pages == [] and partial[1] == 3    # 3-token overlap beats 2
+
+
+def test_partial_insert_registers_leaf_with_valid_length():
+    cache = PrefixCache(PS)
+    alloc = PageAllocator(16, PS, cache=cache)
+    p = alloc.alloc(1, 2)
+    # default contract unchanged: partial tails need explicit opt-in
+    with pytest.raises(AssertionError):
+        cache.insert(list(range(6)), p)
+    cache.insert(list(range(6)), p, allow_partial=True)
+    node = cache._by_page[p[1]]
+    assert node.n_valid == 2 and not node.children
+    # the partial leaf serves only its valid span
+    pages, partial = cache.match_tokens(list(range(8)))
+    assert pages == p[:1] and partial == (p[1], 2)
+    # a partial node never chains: a full insert creates a sibling
+    q = alloc.alloc(2, 1)
+    cache.insert(list(range(8)), p[:1] + q)
+    assert cache.match(list(range(8))) == [p[0], q[0]]
+    assert not cache._by_page[p[1]].children
+
+
+def test_partial_leaf_cost_scales_with_valid_tokens():
+    cache = PrefixCache(PS)
+    alloc = PageAllocator(16, PS, cache=cache)
+    full = alloc.alloc(1, 1)
+    cache.insert(list(range(4)), full)
+    part = alloc.alloc(2, 1)
+    cache.insert([7, 8], part, allow_partial=True)
+    assert cache.page_cost(part[0]) < cache.page_cost(full[0])
+
+
+def test_cow_partial_allocator_accounting():
+    cache = PrefixCache(PS)
+    alloc = PageAllocator(16, PS, cache=cache)
+    p = alloc.alloc(1, 1)
+    cache.insert(list(range(4)), p)
+    alloc.free(1)
+    assert cache.n_reclaimable == 1
+    # reclaimable donor: revived for the copy, parked again after
+    src, dst = alloc.cow_partial(2, p[0])
+    assert src == p[0] and alloc.owned(2) == [dst]
+    assert alloc.ref_count(p[0]) == 0 and cache.n_reclaimable == 1
+    assert not cache.is_cached(dst)
+    assert alloc.n_partial_cow == 1 and alloc.n_cow == 1
+    # referenced donor: refcount restored to its prior value
+    alloc.share(3, [p[0]])
+    src2, dst2 = alloc.cow_partial(4, p[0])
+    assert src2 == p[0] and alloc.ref_count(p[0]) == 1
+    assert alloc.owned(4) == [dst2]
+    for rid in (2, 3, 4):
+        alloc.free(rid)
+    assert alloc.n_allocated == 0
+
+
+# ------------------------------------------------- engine-level behavior ---
+@pytest.mark.parametrize("mode", MODES)
+def test_midpage_divergence_bit_identical_and_strictly_cheaper(setup, mode):
+    """Token-level reuse must be a pure optimization: identical greedy
+    streams vs cache-off AND vs page granularity, with strictly fewer
+    prefill tokens computed than page granularity (which scores zero)."""
+    model, params = setup
+    outs, summ = {}, {}
+    for arm, (gran, cache) in dict(
+            off=("page", False), page=("page", True),
+            token=("token", True)).items():
+        serve = dataclasses.replace(BASE, mode=mode, enable_prefix_cache=cache,
+                                    prefix_cache_granularity=gran)
+        reqs = _midpage_requests(model.cfg.vocab_size)
+        eng = Engine(model, params, serve)
+        s = eng.run(reqs, max_steps=8000).summary()
+        assert s["n_done"] == len(reqs)
+        outs[arm], summ[arm] = [r.out_tokens for r in reqs], s
+        assert eng.alloc.n_allocated == 0 and eng.idle()
+    assert outs["token"] == outs["page"] == outs["off"]
+    assert summ["page"]["cache_hit_rate"] == 0       # no full page is shared
+    assert summ["token"]["cache_hit_rate"] > 0
+    assert summ["token"]["n_partial_hits"] > 0
+    assert (summ["token"]["prefill_tokens_computed"]
+            < summ["page"]["prefill_tokens_computed"])
+    # every partial hit materialized as a COW copy
+    assert (summ["token"]["prefix_cache"]["n_partial_cow"]
+            == summ["token"]["n_partial_hits"])
+
+
+def test_cached_tokens_exact_for_identical_twin(setup):
+    """A twin of a fully-cached prompt reuses everything but the final
+    token (its logits must be recomputed): n_cached_tokens is exact at
+    token granularity, not rounded down to full pages."""
+    model, params = setup
+    rng = np.random.RandomState(4)
+    prompt = list(rng.randint(2, model.cfg.vocab_size, size=10))   # 2.5 pages
+    serve = dataclasses.replace(BASE, mode="sequential")
+    eng = Engine(model, params, serve)
+    eng.run([Request(rid=0, prompt=list(prompt),
+                     sampling=SamplingParams(max_new_tokens=2))],
+            max_steps=500)
+    twin = Request(rid=1, prompt=list(prompt),
+                   sampling=SamplingParams(max_new_tokens=2))
+    m = eng.run([twin], max_steps=500)
+    assert m.req(1).n_cached_tokens == len(prompt) - 1
+    assert m.n_partial_hits >= 1
+
+
+def test_partial_tail_inserted_at_finish_only(setup):
+    """Mid-flight inserts register full pages only (the tail is still
+    being written); after finish the partial tail is cached too and a
+    mid-page-divergent successor reuses it."""
+    model, params = setup
+    serve = dataclasses.replace(BASE, mode="sequential")
+    eng = Engine(model, params, serve)
+    rng = np.random.RandomState(5)
+    prompt = list(rng.randint(2, model.cfg.vocab_size, size=6))    # 1.5 pages
+    eng.run([Request(rid=0, prompt=list(prompt),
+                     sampling=SamplingParams(max_new_tokens=4))],
+            max_steps=500)
+    cache = eng.prefix_cache
+    # committed KV at finish = prompt + generated - 1 (the last token's
+    # KV is never written) = 9 tokens: 2 full pages + a 1-token partial
+    partial_nodes = [n for n in cache._nodes.values() if n.n_valid < PS]
+    assert partial_nodes and all(not n.children for n in partial_nodes)
+    # a successor diverging inside the tail page hits the partial leaf
+    succ = Request(rid=1, prompt=prompt[:5] + [1, 1, 1],
+                   sampling=SamplingParams(max_new_tokens=2))
+    m = eng.run([succ], max_steps=500)
+    assert m.req(1).n_cached_tokens == 5    # 1 full page + 1 partial token
+    assert m.n_partial_hits >= 1
+
+
+def test_page_granularity_preserves_pr3_behaviour(setup):
+    """The "page" knob disables partial matching, COW copies, and
+    partial-tail inserts entirely."""
+    model, params = setup
+    serve = dataclasses.replace(BASE, mode="splitwiser_mps",
+                                prefix_cache_granularity="page")
+    eng = Engine(model, params, serve)
+    reqs = _midpage_requests(model.cfg.vocab_size)
+    s = eng.run(reqs, max_steps=8000).summary()
+    assert s["n_done"] == len(reqs)
+    assert s["n_partial_hits"] == 0 and s["cached_tokens"] == 0
+    assert all(n.n_valid == PS for n in eng.prefix_cache._nodes.values())
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_token_reuse_survives_page_pressure(setup, mode):
+    """Preemption + reclaim + token-level reuse interleave on a small
+    pool: every request completes with oracle-exact greedy streams."""
+    model, params = setup
+    reqs = _midpage_requests(model.cfg.vocab_size, n=5, tail=7, out=8)
+    oracle = _midpage_requests(model.cfg.vocab_size, n=5, tail=7, out=8)
+    Engine(model, params,
+           dataclasses.replace(BASE, mode="sequential",
+                               enable_prefix_cache=False)
+           ).run(oracle, max_steps=8000)
+    small = dataclasses.replace(BASE, mode=mode, n_pages=22,
+                                max_pages_per_seq=12)
+    eng = Engine(model, params, small)
+    s = eng.run(reqs, max_steps=8000).summary()
+    assert s["n_done"] == 5
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in oracle]
+    assert eng.alloc.n_allocated == 0 and eng.idle()
+
+
+# ------------------------------------------------------ admission budget ---
+def test_admission_budget_charges_transient_partial_cow(setup):
+    """cache_probe reports the transient page an unreferenced partial
+    donor holds during the COW copy; admission_pages charges it on top
+    of the miss pages (referenced donors are already capacity-held)."""
+    model, params = setup
+    serve = dataclasses.replace(BASE, mode="sequential")
+    eng = Engine(model, params, serve)
+    rng = np.random.RandomState(6)
+    prompt = list(rng.randint(2, model.cfg.vocab_size, size=7))
+    eng.run([Request(rid=0, prompt=list(prompt),
+                     sampling=SamplingParams(max_new_tokens=1))],
+            max_steps=500)
+    # rid 0 finished: its pages (incl. partial tail) park reclaimable
+    # tail sentinel 1 < 2 never collides with generated prompt tokens
+    succ = Request(rid=1, prompt=prompt[:6] + [1, 1],
+                   sampling=SamplingParams(max_new_tokens=1))
+    n_hit, n_free_hit, cow_extra = eng.cache_probe(succ)
+    assert n_hit == 1 and n_free_hit == 0      # reclaimable, not referenced
+    assert cow_extra == 1                      # donor revive is transient
+    base = eng.sched.admission_pages(succ, n_free_hit)
+    assert eng.sched.admission_pages(succ, n_free_hit, cow_extra) == base + 1
+    # with a live reader holding the chain, nothing transient to charge
+    eng.alloc.share(99, eng.prefix_cache.match(prompt))
+    donor = eng.prefix_cache.match_tokens(succ.prefill_tokens)[1][0]
+    eng.alloc.share(99, [donor])
+    assert eng.cache_probe(succ)[2] == 0
+
+
+def test_granularity_knob_validated():
+    with pytest.raises(ValueError, match="prefix_cache_granularity"):
+        ServeConfig(prefix_cache_granularity="byte")
+    with pytest.raises(ValueError, match="admission_age_weight"):
+        ServeConfig(admission_age_weight=-1.0)
