@@ -16,10 +16,10 @@ def rows():
                        output_tokens=8, max_batch=bs)
         eng = Engine(model, params, sc)
         m = eng.run(make_requests(bs, 48, 8, model.cfg.vocab_size))
-        prefill_usage = [u for u, k in zip(m.kv_usage_trace, m.step_kinds)
-                         if k == "prefill"]
-        decode_usage = [u for u, k in zip(m.kv_usage_trace, m.step_kinds)
-                        if k == "decode"]
+        prefill_usage = [u for u, k in zip(m.kv_usage_trace, m.step_kinds,
+                                           strict=True) if k == "prefill"]
+        decode_usage = [u for u, k in zip(m.kv_usage_trace, m.step_kinds,
+                                          strict=True) if k == "decode"]
         out.append(dict(bench="fig5_kv_usage_vs_batch", x=bs,
                         prefill_usage=round(max(prefill_usage, default=0), 4),
                         token_usage=round(max(decode_usage, default=0), 4)))

@@ -79,11 +79,17 @@ def _run(model, params, serve, *, n_req=N_REQ, seed=0):
     return s, [r.out_tokens for r in reqs]
 
 
-def rows(*, mode=MODE):
+def rows(*, mode=MODE, smoke=False):
+    # smoke: the CI-gate subset — every admission policy, but only the
+    # eviction/preempt arms that exercise distinct code paths (lru vs the
+    # cost model; latest preemption).  Rows stay deterministic and
+    # bit-identical to the same cells of the full matrix.
+    evictions = ("lru", "cost") if smoke else EVICTIONS
+    preempts = ("latest",) if smoke else PREEMPTS
     model, params = model_and_params("opt-125m")
     _run(model, params, _serve(mode, "fcfs", "lru", "latest"), n_req=2)  # warm
     out, streams, cells = [], {}, {}
-    for adm, ev, pre in itertools.product(ADMISSIONS, EVICTIONS, PREEMPTS):
+    for adm, ev, pre in itertools.product(ADMISSIONS, evictions, preempts):
         s, toks = _run(model, params, _serve(mode, adm, ev, pre))
         streams[(adm, ev, pre)] = toks
         cells[(adm, ev, pre)] = s
@@ -107,7 +113,7 @@ def rows(*, mode=MODE):
         ))
     first = next(iter(streams.values()))
     identical = all(t == first for t in streams.values())
-    for ev, pre in itertools.product(EVICTIONS, PREEMPTS):
+    for ev, pre in itertools.product(evictions, preempts):
         fcfs = cells[("fcfs", ev, pre)]
         aware = cells[("cache_aware", ev, pre)]
         out.append(dict(

@@ -15,12 +15,12 @@ freely (they have no baseline yet).  Validation checks recorded in the
 baseline must not flip from pass to fail.
 
     # refresh the committed baseline after an intentional change:
-    PYTHONPATH=src python -m benchmarks.run --only shared_prefix \
-        --json BENCH_baseline.json
+    PYTHONPATH=src python -m benchmarks.run --smoke \
+        --only shared_prefix,pressure,policy_sweep --json BENCH_baseline.json
 
     # what CI runs on every PR:
-    PYTHONPATH=src python -m benchmarks.run --only shared_prefix \
-        --json bench_fresh.json
+    PYTHONPATH=src python -m benchmarks.run --smoke \
+        --only shared_prefix,pressure,policy_sweep --json bench_fresh.json
     PYTHONPATH=src python -m benchmarks.regression_gate \
         BENCH_baseline.json bench_fresh.json
 """
@@ -41,8 +41,17 @@ GATED_FIELDS = {
     "prefill_tokens_token": ("max", "count"),
     "prefill_tokens_saved": ("min", "count"),
     "n_partial_hits": ("min", "count"),
+    # scheduler-health counters (pressure + policy_sweep rows): these are
+    # deterministic, and growth means thrash — a scheduler change that
+    # preempts or reclaims more to finish the same workload is a
+    # regression even when completion counts hold
+    "n_preemptions": ("max", "count"),
+    "n_preempted_requests": ("max", "count"),
+    "n_reclaims": ("max", "count"),
 }
-BOOL_FIELDS = ("all_complete", "tokens_match")   # must not flip true -> false
+# must not flip true -> false (seed_crash rows record True: the
+# oversubscribed pool *must* crash the seed admission policy)
+BOOL_FIELDS = ("all_complete", "tokens_match", "seed_crash")
 
 
 def _rows_by_key(report: dict) -> dict:
@@ -67,10 +76,8 @@ def compare(baseline: dict, fresh: dict, *, hit_rate_tol: float = 0.02,
                 failures.append(f"{key}: field {field} missing from fresh run")
                 continue
             tol = hit_rate_tol if kind == "rate" else count_tol * max(abs(b), 1)
-            if direction == "min" and f < b - tol:
-                failures.append(
-                    f"{key}: {field} regressed {b} -> {f} (tol {tol:.4g})")
-            elif direction == "max" and f > b + tol:
+            if (direction == "min" and f < b - tol) or \
+                    (direction == "max" and f > b + tol):
                 failures.append(
                     f"{key}: {field} regressed {b} -> {f} (tol {tol:.4g})")
         for field in BOOL_FIELDS:

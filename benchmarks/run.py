@@ -16,33 +16,40 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of suite names to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced deterministic sizing for suites that "
+                         "support it (CI regression-gate runs)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows + validation results as JSON")
     args, _ = ap.parse_known_args()
 
     from benchmarks import batching, kv_usage, open_loop, phase_intensity
-    from benchmarks import policy_sweep, pressure, shared_prefix
-    from benchmarks import splitwiser_hf, splitwiser_vllm
+    from benchmarks import policy_sweep, pressure, sanitizer_overhead
+    from benchmarks import shared_prefix, splitwiser_hf, splitwiser_vllm
 
+    # (name, rows_fn, accepts_smoke)
     suites = [
-        ("phase_intensity", phase_intensity.rows),   # Figs 2-4
-        ("kv_usage", kv_usage.rows),                 # Figs 5, 14, 15
-        ("splitwiser_hf", splitwiser_hf.rows),       # Figs 6-9
-        ("splitwiser_vllm", splitwiser_vllm.rows),   # Figs 10-11
-        ("batching", batching.rows),                 # Figs 12-13
-        ("pressure", pressure.rows),                 # beyond-paper: KV pressure
-        ("open_loop", open_loop.rows),               # beyond-paper: Poisson arrivals
-        ("shared_prefix", shared_prefix.rows),       # beyond-paper: prefix cache
-        ("policy_sweep", policy_sweep.rows),         # beyond-paper: policy matrix
+        ("phase_intensity", phase_intensity.rows, False),   # Figs 2-4
+        ("kv_usage", kv_usage.rows, False),                 # Figs 5, 14, 15
+        ("splitwiser_hf", splitwiser_hf.rows, False),       # Figs 6-9
+        ("splitwiser_vllm", splitwiser_vllm.rows, False),   # Figs 10-11
+        ("batching", batching.rows, False),                 # Figs 12-13
+        ("pressure", pressure.rows, False),                 # beyond-paper: KV pressure
+        ("open_loop", open_loop.rows, False),               # beyond-paper: Poisson arrivals
+        ("shared_prefix", shared_prefix.rows, False),       # beyond-paper: prefix cache
+        ("policy_sweep", policy_sweep.rows, True),          # beyond-paper: policy matrix
+        ("sanitizer_overhead", sanitizer_overhead.rows, False),  # analysis layer cost
     ]
+    only = args.only.split(",") if args.only else None
     all_rows = []
     print("name,us_per_call,derived")
-    for name, fn in suites:
-        if args.only and args.only not in name:
+    for name, fn, accepts_smoke in suites:
+        if only and not any(tok in name for tok in only):
             continue
         t0 = time.perf_counter()
-        rows = fn()
+        rows = fn(smoke=True) if (args.smoke and accepts_smoke) else fn()
         dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
         for r in rows:
             all_rows.append(r)
@@ -156,6 +163,11 @@ def main() -> None:
                            all(r["n_done"] == r["n_requests"]
                                and r["n_reclaims"] > 0
                                for r in by("policy_sweep"))))
+        so = by("sanitizer_overhead_delta")
+        if so:
+            checks.append(("sanitizer is read-only: greedy token streams "
+                           "bit-identical across off/finish/step",
+                           all(r["tokens_match"] for r in so)))
     if checks:
         print("\n== paper-claim validation ==")
     ok = True

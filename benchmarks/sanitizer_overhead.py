@@ -1,0 +1,113 @@
+"""Runtime-sanitizer overhead: wall cost of `ServeConfig.sanitize_level`.
+
+The KV-state sanitizer (repro.analysis.invariants) re-validates the full
+allocator/trie/scheduler contract after engine steps; this scenario
+measures what that costs on the two serving profiles where its checks do
+the most work — the shared-prefix workload (trie walks, refcounted
+sharing, COW) and the oversubscribed-pressure workload (preemption,
+reclaim, budget accounting) — at each level:
+
+    off     baseline (no checker object at all)
+    finish  full validation only after steps that finish a request
+    soundness for CI-by-sampling; near-zero steady-state cost
+    step    full validation after every step (CI tier-1 mode)
+
+Per (scenario, level): timed second run on a pre-compiled engine (the
+first run absorbs jit compilation), microseconds per step, number of
+full-state validations performed, and the overhead percentage vs the
+``off`` arm.  A delta row per scenario asserts the greedy token streams
+are bit-identical across levels — the sanitizer is read-only by
+contract, and this is where that claim is continuously measured.
+Numbers feed the EXPERIMENTS.md recommendation (step in CI, finish for
+local debugging, off in production).
+
+    PYTHONPATH=src python -m benchmarks.sanitizer_overhead
+"""
+import dataclasses
+import time
+
+from benchmarks.common import make_requests, model_and_params
+from benchmarks.pressure import INPUT, N_REQ, OUTPUT
+from benchmarks.pressure import _serve as pressure_serve
+from benchmarks.shared_prefix import OUTPUT as SP_OUTPUT
+from benchmarks.shared_prefix import _requests as shared_requests
+from benchmarks.shared_prefix import serve_cfg
+from repro.core.engine import Engine
+
+LEVELS = ("off", "finish", "step")
+MODE = "splitwiser_mps"
+SP_N, SP_K = 8, 2
+
+
+def _shared_cell(level):
+    sc = serve_cfg(MODE, n_requests=SP_N, input_tokens=56,
+                   output_tokens=SP_OUTPUT, max_batch=4, n_streams=2,
+                   prefill_chunk=16)
+    return dataclasses.replace(sc, enable_prefix_cache=True,
+                               sanitize_level=level)
+
+
+def _pressure_cell(level):
+    return dataclasses.replace(pressure_serve(MODE), sanitize_level=level)
+
+
+def _workload(scenario, vocab, rid_base):
+    if scenario == "shared_prefix":
+        reqs = shared_requests(SP_N, SP_K, vocab)
+    else:
+        reqs = make_requests(N_REQ, INPUT, OUTPUT, vocab)
+    for i, r in enumerate(reqs):
+        r.rid = rid_base + i
+    return reqs
+
+
+def rows():
+    model, params = model_and_params("opt-125m")
+    vocab = model.cfg.vocab_size
+    out = []
+    for scenario, cfg_fn in (("shared_prefix", _shared_cell),
+                             ("pressure", _pressure_cell)):
+        # throwaway cell: process-global one-time costs (XLA client init,
+        # first-dispatch paths) must not land in the first timed arm
+        warm = Engine(model, params, cfg_fn("off"))
+        warm.run(_workload(scenario, vocab, 0), max_steps=40_000)
+        warm.run(_workload(scenario, vocab, 1000), max_steps=40_000)
+        base_us = None
+        streams = {}
+        for level in LEVELS:
+            eng = Engine(model, params, cfg_fn(level))
+            eng.run(_workload(scenario, vocab, 0), max_steps=40_000)  # compile
+            reqs = _workload(scenario, vocab, 1000)
+            n0 = eng.metrics.n_steps
+            t0 = time.perf_counter()
+            eng.run(reqs, max_steps=40_000)
+            wall = time.perf_counter() - t0
+            n_steps = eng.metrics.n_steps - n0
+            us_per_step = wall * 1e6 / max(n_steps, 1)
+            if level == "off":
+                base_us = us_per_step
+            streams[level] = [r.out_tokens for r in reqs]
+            out.append(dict(
+                bench="sanitizer_overhead", x=f"{scenario}/{level}",
+                n_requests=len(reqs),
+                n_done=sum(1 for r in reqs if r.out_tokens),
+                n_steps=n_steps,
+                n_checks=0 if eng.sanitizer is None else eng.sanitizer.n_checks,
+                wall_s=round(wall, 4),
+                us_per_step=round(us_per_step, 1),
+                overhead_pct=round(100.0 * (us_per_step - base_us) / base_us, 2),
+            ))
+        out.append(dict(
+            bench="sanitizer_overhead_delta", x=scenario,
+            tokens_match=all(streams[lv] == streams["off"] for lv in LEVELS),
+        ))
+    return out
+
+
+def main():
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+# Invariant-analysis layer for the serving stack: a runtime sanitizer
+# (invariants.py) that validates the cross-module allocator/trie/scheduler
+# contract after engine steps, and an AST lint (lint.py) encoding
+# repo-specific pitfalls learned from real fixed bugs.
+#
+# This package must stay importable without jax/numpy: the lint runs in
+# CI environments (and pre-commit hooks) that never install the heavy
+# deps, so keep module-level imports stdlib-only.
+from repro.analysis.invariants import (InvariantViolation, KVSanitizer,
+                                       SANITIZE_LEVELS, verify_state)
+
+__all__ = [
+    "InvariantViolation", "KVSanitizer", "SANITIZE_LEVELS", "verify_state",
+]

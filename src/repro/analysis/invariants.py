@@ -1,0 +1,473 @@
+"""Runtime KV-state sanitizer: the serving stack's cross-module contract
+as machine-checked invariants.
+
+The serving core is a web of state shared across modules — refcounted
+copy-on-write pages (``core/kv_cache.py``), a token-granular prefix trie
+with partial leaves (``core/prefix_cache.py``), and policy-driven
+reclaim/preemption (``core/scheduler.py``).  Each module documents its
+side of the contract; this module makes the *whole* contract executable,
+so a violation fails loudly at the step that corrupts state instead of
+surfacing N steps later as a wrong token or a phantom OutOfPages.
+
+Gating (``ServeConfig.sanitize_level``)
+    ``off``     never check (production default; zero overhead).
+    ``finish``  run the full check after any engine step that finished a
+                request — terminal points are where insert/free/requeue
+                interact, which is where past bugs clustered.
+    ``step``    run the full check after *every* engine step (CI mode;
+                tier-1 and the hypothesis suite run under this level).
+
+Invariants checked
+    * **page conservation** — the free list, the cache's reclaimable
+      pool, and live-referenced pages partition the usable pool exactly
+      (no page lost, none counted twice, the trash page in none of them);
+    * **refcount honesty** — allocator refcounts equal the multiset of
+      per-request page-table references; zero-ref entries leave the
+      table entirely;
+    * **COW exclusivity** — a page mapped by more than one request is
+      registered in the prefix trie (sharing only arises through the
+      cache; ``prepare_write`` can only guard pages it knows are
+      shared), or was explicitly orphaned by the blocked-subtree
+      eviction fallback; no request maps the same page twice;
+    * **trie structure** — parent-before-child, gap-free chains with
+      consistent child links, ``1 <= n_valid <= page_size``, partial
+      leaves terminal, descendant counts exact, reclaimable pool
+      consistent with refcounts (a zero-ref cached page is reclaimable,
+      a referenced one is not, none sit on the free list);
+    * **scheduler budget honesty** — the pages an admission charged
+      against the watermark budget bound what the request actually
+      consumed from the free pool through the end of its prefill
+      (fresh allocations + reclaimable revivals + COW copies).
+
+On failure a structured :class:`InvariantViolation` is raised carrying
+the violated invariant's name, an allocator/trie/scheduler state dump,
+and the tail of the scheduler's :class:`~repro.core.metrics.EventRing`
+for post-mortem.
+
+``verify_state(alloc, cache)`` runs the allocator/trie subset without an
+engine — the hypothesis property suite drives random lifecycle
+interleavings through it.
+
+Adding an invariant: see EXPERIMENTS.md ("adding a lint rule / adding an
+invariant").
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+SANITIZE_LEVELS = ("off", "finish", "step")
+
+_EVENT_TAIL = 16      # sched events carried in the violation report
+_NODE_DUMP_CAP = 64   # trie nodes listed in the state dump
+
+
+class InvariantViolation(RuntimeError):
+    """A cross-module serving invariant failed.
+
+    Attributes
+        invariant   machine-readable name of the violated invariant
+                    (e.g. ``"page_conservation"``, ``"refcount_honesty"``)
+        state       allocator/trie/scheduler state dump at failure time
+        events      tail of the scheduler event ring (post-mortem trace)
+    """
+
+    def __init__(self, invariant: str, message: str,
+                 state: Optional[Dict[str, Any]] = None,
+                 events: Optional[List[dict]] = None):
+        self.invariant = invariant
+        self.state = state or {}
+        self.events = list(events or [])
+        text = f"[{invariant}] {message}"
+        if self.state:
+            text += "\n--- state dump ---\n" + json.dumps(
+                self.state, indent=1, default=str, sort_keys=True)
+        if self.events:
+            text += (f"\n--- last {len(self.events)} sched events ---\n"
+                     + "\n".join(f"  {e}" for e in self.events))
+        super().__init__(text)
+
+
+# --------------------------------------------------------- state dumps ----
+def allocator_state(alloc) -> Dict[str, Any]:
+    """JSON-serializable snapshot of a :class:`PageAllocator`."""
+    return {
+        "n_pages": alloc.n_pages,
+        "page_size": alloc.page_size,
+        "n_free": alloc.n_free,
+        "free_list": sorted(alloc._free),
+        "refs": {str(p): c for p, c in sorted(alloc._ref.items())},
+        "owned": {str(r): list(pages) for r, pages in sorted(alloc._owned.items())},
+        "consumed": {str(r): c for r, c in sorted(alloc._consumed.items())},
+    }
+
+
+def trie_state(cache) -> Dict[str, Any]:
+    """JSON-serializable snapshot of a :class:`PrefixCache`."""
+    if cache is None:
+        return {"enabled": False}
+    nodes = {}
+    for node in list(cache._nodes.values())[:_NODE_DUMP_CAP]:
+        nodes[str(node.nid)] = {
+            "page": node.page,
+            "parent": None if node.parent is None else node.parent.nid,
+            "n_valid": node.n_valid,
+            "depth": node.depth,
+            "n_desc": node.n_desc,
+            "reclaimable": node.reclaimable,
+        }
+    return {
+        "enabled": True,
+        "n_nodes": len(cache._nodes),
+        "n_reclaimable": cache.n_reclaimable,
+        "reclaimable_pages": sorted(cache._reclaimable),
+        "orphaned_shared": sorted(cache.orphaned_shared),
+        "nodes": nodes,
+        "nodes_truncated": len(cache._nodes) > _NODE_DUMP_CAP,
+    }
+
+
+def _state(alloc, cache, extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    state = {"allocator": allocator_state(alloc), "trie": trie_state(cache)}
+    if extra:
+        state.update(extra)
+    return state
+
+
+# ------------------------------------------------------------- checkers ----
+def _check_page_conservation(fail, alloc, cache) -> None:
+    free_list = list(alloc._free)
+    free = set(free_list)
+    if len(free) != len(free_list):
+        dupes = sorted(p for p in free if free_list.count(p) > 1)
+        fail("page_conservation",
+             f"free list holds duplicate entries {dupes} (double free)")
+    live = set(alloc._ref)
+    recl = set(cache._reclaimable) if cache is not None else set()
+    for name, pages in (("free list", free), ("live set", live),
+                        ("reclaimable pool", recl)):
+        if alloc.trash_page in pages:
+            fail("page_conservation",
+                 f"trash page {alloc.trash_page} appears in the {name}")
+    overlaps = [("free/live", free & live), ("free/reclaimable", free & recl),
+                ("live/reclaimable", live & recl)]
+    for name, inter in overlaps:
+        if inter:
+            fail("page_conservation",
+                 f"page sets overlap ({name}): {sorted(inter)}")
+    usable = alloc.n_pages - 1
+    total = len(free) + len(live) + len(recl)
+    if total != usable:
+        missing = set(range(usable)) - free - live - recl
+        fail("page_conservation",
+             f"free({len(free)}) + live({len(live)}) + "
+             f"reclaimable({len(recl)}) = {total} != pool size {usable}"
+             + (f"; leaked pages {sorted(missing)}" if missing else ""))
+    if alloc.n_free != len(free) + len(recl):
+        fail("page_conservation",
+             f"n_free property reports {alloc.n_free}, actual "
+             f"free+reclaimable is {len(free) + len(recl)}")
+
+
+def _check_refcount_honesty(fail, alloc) -> None:
+    for page, refs in alloc._ref.items():
+        if refs < 1:
+            fail("refcount_honesty",
+                 f"page {page} has refcount {refs}; zero-ref entries must "
+                 "leave the table (park reclaimable or return to the free list)")
+    counts: Dict[int, int] = {}
+    for pages in alloc._owned.values():
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+    if counts != alloc._ref:
+        drift = {p: (counts.get(p, 0), alloc._ref.get(p, 0))
+                 for p in set(counts) | set(alloc._ref)
+                 if counts.get(p, 0) != alloc._ref.get(p, 0)}
+        fail("refcount_honesty",
+             "allocator refcounts disagree with per-request page tables "
+             f"(page: (table refs, refcount)): {drift}")
+
+
+def _check_cow_exclusivity(fail, alloc, cache) -> None:
+    for rid, pages in alloc._owned.items():
+        if len(set(pages)) != len(pages):
+            dupes = sorted(p for p in set(pages) if pages.count(p) > 1)
+            fail("cow_exclusivity",
+                 f"request {rid} maps pages {dupes} more than once")
+    for page, refs in alloc._ref.items():
+        if refs <= 1:
+            continue
+        cached = cache is not None and cache.is_cached(page)
+        orphaned = cache is not None and page in cache.orphaned_shared
+        if not (cached or orphaned):
+            fail("cow_exclusivity",
+                 f"page {page} is mapped by {refs} requests but is not "
+                 "registered in the prefix trie: sharing outside the cache "
+                 "contract means copy-on-write cannot protect its readers")
+
+
+def _check_trie_structure(fail, alloc, cache) -> None:
+    if cache is None:
+        return
+    if len(cache._by_page) != len(cache._nodes):
+        fail("trie_structure",
+             f"page index holds {len(cache._by_page)} entries for "
+             f"{len(cache._nodes)} nodes (aliased or leaked pages)")
+    n_children: Dict[int, int] = {}
+    n_desc: Dict[int, int] = {}
+    for node in cache._nodes.values():
+        if cache._by_page.get(node.page) is not node:
+            fail("trie_structure",
+                 f"node {node.nid} (page {node.page}) missing from or "
+                 "aliased in the page index")
+        if not 1 <= node.n_valid <= cache.page_size:
+            fail("trie_structure",
+                 f"node {node.nid} has n_valid={node.n_valid} outside "
+                 f"[1, page_size={cache.page_size}]")
+        if node.n_valid < cache.page_size and node.children:
+            fail("trie_structure",
+                 f"partial leaf {node.nid} (n_valid={node.n_valid}) has "
+                 f"{len(node.children)} children; partial pages are "
+                 "terminal — nothing can chain past an unwritten tail")
+        if node.parent is None:
+            if node.depth != 0:
+                fail("trie_structure",
+                     f"root-level node {node.nid} has depth {node.depth}")
+            if cache._roots.get(node.key[1]) is not node:
+                fail("trie_structure",
+                     f"root-level node {node.nid} is not linked from the "
+                     "root map (orphaned chain head)")
+        else:
+            parent = node.parent
+            if cache._nodes.get(parent.key) is not parent:
+                fail("trie_structure",
+                     f"node {node.nid} (page {node.page}) points at parent "
+                     f"{parent.nid} which is not in the trie (orphaned "
+                     "node: its chain has a gap)")
+            if parent.nid >= node.nid:
+                fail("trie_structure",
+                     f"node {node.nid} was created before its parent "
+                     f"{parent.nid} (parent-before-child violated)")
+            if node.depth != parent.depth + 1:
+                fail("trie_structure",
+                     f"node {node.nid} depth {node.depth} != parent depth "
+                     f"{parent.depth} + 1")
+            if parent.children.get(node.key[1]) is not node:
+                fail("trie_structure",
+                     f"node {node.nid} is not linked from its parent's "
+                     "children (gap in the chain)")
+            anc = parent
+            while anc is not None:
+                n_desc[anc.nid] = n_desc.get(anc.nid, 0) + 1
+                anc = anc.parent
+            n_children[parent.nid] = n_children.get(parent.nid, 0) + 1
+    for node in cache._nodes.values():
+        if node.n_desc != n_desc.get(node.nid, 0):
+            fail("trie_structure",
+                 f"node {node.nid} records n_desc={node.n_desc}, actual "
+                 f"descendant count is {n_desc.get(node.nid, 0)}")
+        if len(node.children) != n_children.get(node.nid, 0):
+            fail("trie_structure",
+                 f"node {node.nid} child links ({len(node.children)}) "
+                 f"disagree with the node table ({n_children.get(node.nid, 0)})")
+        for chunk, child in node.children.items():
+            if child.parent is not node or child.key != (node.nid, chunk):
+                fail("trie_structure",
+                     f"child link {node.nid} -> {child.nid} is inconsistent "
+                     "with the child's own key/parent")
+    for chunk, node in cache._roots.items():
+        if cache._nodes.get(node.key) is not node or node.key != (0, chunk):
+            fail("trie_structure",
+                 f"root link {chunk!r} points at a dead or mis-keyed node")
+    # reclaimable pool vs refcounts
+    for page, node in cache._reclaimable.items():
+        if cache._by_page.get(page) is not node:
+            fail("trie_structure",
+                 f"reclaimable page {page} is not (or no longer) cached")
+        if not node.reclaimable:
+            fail("trie_structure",
+                 f"reclaimable page {page} has reclaimable=False on its node")
+        if page in alloc._ref:
+            fail("trie_structure",
+                 f"page {page} is reclaimable while still referenced "
+                 f"({alloc._ref[page]} refs): it could be stripped out from "
+                 "under a live request")
+    free = set(alloc._free)
+    for page, node in cache._by_page.items():
+        if page not in alloc._ref and page not in cache._reclaimable:
+            fail("trie_structure",
+                 f"cached page {page} has zero refs but is not parked "
+                 "reclaimable (leaked capacity)")
+        if node.reclaimable and page not in cache._reclaimable:
+            fail("trie_structure",
+                 f"node for page {page} is flagged reclaimable but absent "
+                 "from the reclaimable pool")
+        if page in free:
+            fail("trie_structure",
+                 f"cached page {page} sits on the free list: the trie "
+                 "would serve stale KV after it is reallocated")
+
+
+_STATE_CHECKS = (_check_page_conservation, _check_refcount_honesty,
+                 _check_cow_exclusivity, _check_trie_structure)
+
+
+def verify_state(alloc, cache=None,
+                 extra: Optional[Dict[str, Any]] = None,
+                 events: Optional[List[dict]] = None) -> None:
+    """Run every allocator/trie invariant; raise :class:`InvariantViolation`
+    on the first failure.  ``cache`` defaults to ``alloc.cache``.
+
+    Engine-free entry point: the hypothesis property suite calls this
+    after every random lifecycle op; :class:`KVSanitizer` wraps it with
+    engine/scheduler context.
+    """
+    if cache is None:
+        cache = alloc.cache
+
+    def fail(invariant: str, message: str) -> None:
+        raise InvariantViolation(invariant, message,
+                                 state=_state(alloc, cache, extra),
+                                 events=events)
+
+    for check in _STATE_CHECKS:
+        if check is _check_refcount_honesty:
+            check(fail, alloc)
+        else:
+            check(fail, alloc, cache)
+
+
+# ------------------------------------------------------------ sanitizer ----
+class KVSanitizer:
+    """Engine-attached runtime sanitizer (``ServeConfig.sanitize_level``).
+
+    The engine calls :meth:`after_step` at the end of every ``step()``;
+    the scheduler reports each admission's charged page budget
+    (:meth:`note_admit`) and the engine reports prefill completion
+    (:meth:`note_first_token`), closing the loop on scheduler budget
+    honesty.  All checks are read-only: token streams are bit-identical
+    across sanitize levels.
+    """
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.level = engine.serve.sanitize_level
+        if self.level not in SANITIZE_LEVELS:     # engine built around config
+            raise ValueError(f"unknown sanitize_level {self.level!r}; "
+                             f"supported: {', '.join(SANITIZE_LEVELS)}")
+        # rid -> (pages charged at admission, progress-override flag)
+        self._budgets: Dict[int, Tuple[int, bool]] = {}
+        self.n_checks = 0     # full-state validations performed (overhead/bench)
+
+    # --- scheduler hooks ---------------------------------------------------
+    def note_admit(self, rid: int, pages: int, override: bool) -> None:
+        """An admission round charged ``pages`` against the watermark
+        budget for ``rid`` (``override``: the bare-fit progress override
+        fired, so the charge deliberately ignores headroom and transient
+        COW capacity — exempt from the budget check)."""
+        self._budgets[rid] = (pages, override)
+
+    def note_preempt(self, rid: int) -> None:
+        """``rid`` was evicted before completing its prefill; its next
+        admission re-budgets from scratch."""
+        self._budgets.pop(rid, None)
+
+    # --- engine hooks ------------------------------------------------------
+    def note_first_token(self, rid: int) -> None:
+        """Prefill complete: everything the request took from the free
+        pool since admission (fresh allocations, reclaimable revivals,
+        COW copies) must fit the pages its admission charged."""
+        budget = self._budgets.pop(rid, None)
+        if budget is None:
+            return
+        need, override = budget
+        if override:
+            return
+        consumed = self.eng.alloc.consumed(rid)
+        if consumed > need:
+            self._fail("scheduler_budget",
+                       f"request {rid} consumed {consumed} pages from the "
+                       f"free pool during its prefill but admission charged "
+                       f"only {need}: the watermark budget under-reserved "
+                       "(misses, reclaimable revivals, or COW copies were "
+                       "not counted)")
+
+    def after_step(self, finished: bool) -> None:
+        """End-of-step gate: full validation at ``step`` level always,
+        at ``finish`` level only when this step finished a request."""
+        if self.level == "step" or (self.level == "finish" and finished):
+            self.check_now()
+
+    # --- validation --------------------------------------------------------
+    def _events_tail(self) -> List[dict]:
+        return list(self.eng.metrics.sched_events[-_EVENT_TAIL:])
+
+    def _engine_state(self) -> Dict[str, Any]:
+        eng = self.eng
+        return {"engine": {
+            "mode": eng.serve.mode,
+            "step": eng.metrics.n_steps,
+            "slots": {str(i): {"rid": s.req.rid, "seq_len": s.seq_len}
+                      for i, s in enumerate(eng.slots) if s is not None},
+            "streams": {str(i): {"rid": s.req.rid, "pos": s.pos,
+                                 "len": len(s.tokens)}
+                        for i, s in enumerate(eng.streams) if s is not None},
+            "waiting": [r.rid for r in eng.sched.waiting],
+            "budgets": {str(r): list(b) for r, b in self._budgets.items()},
+        }}
+
+    def _fail(self, invariant: str, message: str) -> None:
+        raise InvariantViolation(
+            invariant, message,
+            state=_state(self.eng.alloc, self.eng.prefix_cache,
+                         self._engine_state()),
+            events=self._events_tail())
+
+    def check_now(self) -> None:
+        """Run the full cross-module contract against live engine state."""
+        eng = self.eng
+        self.n_checks += 1
+        verify_state(eng.alloc, eng.prefix_cache,
+                     extra=self._engine_state(), events=self._events_tail())
+        active: Dict[int, str] = {}
+        for kind, cont in (("slot", eng.slots), ("stream", eng.streams)):
+            for i, s in enumerate(cont):
+                if s is None:
+                    continue
+                rid = s.req.rid
+                where = f"{kind}[{i}]"
+                if rid in active:
+                    self._fail("request_identity",
+                               f"request {rid} is active in both "
+                               f"{active[rid]} and {where}")
+                active[rid] = where
+                committed = s.seq_len if kind == "slot" else s.pos
+                owned = eng.alloc.owned(rid)
+                need = eng.alloc.pages_needed(committed)
+                if len(owned) < need:
+                    self._fail("page_coverage",
+                               f"{where} (rid {rid}) has {committed} "
+                               f"committed tokens needing {need} pages but "
+                               f"owns only {len(owned)}")
+                if len(owned) > eng.serve.max_pages_per_seq:
+                    self._fail("page_coverage",
+                               f"{where} (rid {rid}) owns {len(owned)} pages, "
+                               f"over max_pages_per_seq="
+                               f"{eng.serve.max_pages_per_seq}")
+                if kind == "slot":
+                    row = [int(p) for p in eng.block_tables[i, :len(owned)]]
+                    if row != list(owned):
+                        self._fail("block_table",
+                                   f"slot {i} (rid {rid}) block-table row "
+                                   f"{row} diverged from its allocator "
+                                   f"page table {list(owned)}")
+        seen_waiting = set()
+        for r in eng.sched.waiting:
+            if r.rid in active:
+                self._fail("request_identity",
+                           f"request {r.rid} is simultaneously waiting and "
+                           f"active in {active[r.rid]}")
+            if r.rid in seen_waiting:
+                self._fail("request_identity",
+                           f"request {r.rid} queued twice")
+            seen_waiting.add(r.rid)

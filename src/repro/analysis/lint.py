@@ -1,0 +1,336 @@
+"""Repo-specific AST lint: static rejection of bug classes this repo has
+already shipped and fixed.
+
+Generic linters (ruff) catch generic mistakes; each rule here encodes a
+*specific* incident or contract from this codebase's history:
+
+RPR001 mutable-default
+    A dataclass field (or function argument) defaulted to a mutable
+    literal or a bare constructor call shares ONE instance across every
+    construction.  The PR-3 ``Request.sampling`` bug was exactly this —
+    every request silently shared one ``SamplingParams``.  Use
+    ``field(default_factory=...)``.
+RPR002 bare-assert
+    ``assert`` on a runtime path is stripped under ``python -O``: the
+    check silently vanishes in optimized deployments.  Raise an explicit
+    exception (ValueError/RuntimeError/...) instead.  (Tests are not
+    linted — pytest asserts are the idiom there.)
+RPR003 serveconfig-unvalidated
+    Every ``ServeConfig`` field must be validated in ``__post_init__``.
+    Unvalidated knobs fail deep inside the engine (or worse, don't);
+    the config layer is where a bad value should die with a clear
+    message.  A field counts as validated when ``__post_init__``
+    mentions it — as a ``self.<field>`` access or as a string literal
+    (the registry-loop idiom ``for knob in ("a", "b"): getattr(...)``).
+RPR004 jnp-in-loop
+    A ``jnp.*`` call inside a Python-level ``for``/``while`` on the
+    host path dispatches one XLA op per iteration — the engine's
+    per-token loops must stay in numpy / plain Python, batching device
+    work into the jitted step functions.  Scoped to ``core/`` (model
+    code legitimately builds layer loops that jit traces once).
+RPR005 metrics-unsurfaced
+    A numeric ``EngineMetrics`` counter that ``summary()`` never reads
+    is write-only telemetry: benchmarks and the regression gate can't
+    see it, so regressions in what it counts ship silently.
+
+Run as ``python -m repro.analysis.lint src/`` (non-zero exit on
+findings).  Stdlib-only on purpose: the CI lint job and pre-commit hooks
+run it without jax/numpy installed.
+
+Adding a rule: subclass ``Rule``, emit ``Finding``s from ``check``, add
+an instance to ``RULES``, and seed ``tests/test_lint.py`` with a fixture
+that triggers it (rules must be proven live, not vacuous).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Iterator, List, NamedTuple, Optional, Sequence
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _decorator_name(node: ast.expr) -> str:
+    """Rightmost dotted name of a decorator, unwrapping calls:
+    ``@dataclasses.dataclass(frozen=True)`` -> ``dataclass``."""
+    if isinstance(node, ast.Call):
+        node = node.func
+    while isinstance(node, ast.Attribute):
+        node = ast.Name(id=node.attr)
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    return any(_decorator_name(d) == "dataclass" for d in node.decorator_list)
+
+
+def _call_root(node: ast.expr) -> Optional[str]:
+    """Root name of a call target: ``jnp.zeros`` -> ``jnp``."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _callee_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return f.id if isinstance(f, ast.Name) else ""
+
+
+class Rule:
+    code = ""
+    name = ""
+    # only lint files whose posix path contains this substring ("" = all)
+    scope = ""
+
+    def applies(self, path: str) -> bool:
+        return self.scope in Path(path).as_posix()
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set,
+                     ast.ListComp, ast.DictComp, ast.SetComp)
+# calls allowed as defaults: dataclasses.field and immutable constructors
+_DEFAULT_CALL_ALLOW = {"field", "frozenset", "tuple", "MappingProxyType"}
+
+
+class MutableDefault(Rule):
+    code = "RPR001"
+    name = "mutable-default"
+
+    def _flag(self, node: ast.expr, where: str) -> Iterator[Finding]:
+        if isinstance(node, _MUTABLE_LITERALS):
+            yield Finding("", node.lineno, self.code,
+                          f"mutable literal default on {where}: one instance "
+                          "is shared by every call/construction; use "
+                          "field(default_factory=...) (or None + init)")
+        elif isinstance(node, ast.Call) and \
+                _callee_name(node) not in _DEFAULT_CALL_ALLOW:
+            yield Finding("", node.lineno, self.code,
+                          f"call default on {where} runs ONCE at definition "
+                          "time and shares the result (the PR-3 "
+                          "Request.sampling bug class); use "
+                          "field(default_factory=...)")
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                for default in (*args.defaults, *args.kw_defaults):
+                    if default is not None:
+                        yield from self._flag(
+                            default, f"argument of {node.name}()")
+            elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+                for stmt in node.body:
+                    value = None
+                    if isinstance(stmt, (ast.AnnAssign, ast.Assign)):
+                        value = stmt.value
+                    if value is not None:
+                        yield from self._flag(
+                            value, f"dataclass field of {node.name}")
+
+
+class BareAssert(Rule):
+    code = "RPR002"
+    name = "bare-assert"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assert):
+                yield Finding("", node.lineno, self.code,
+                              "bare assert on a runtime path is stripped "
+                              "under python -O; raise an explicit exception")
+
+
+class ServeConfigValidated(Rule):
+    code = "RPR003"
+    name = "serveconfig-unvalidated"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == "ServeConfig":
+                yield from self._check_class(node)
+
+    def _check_class(self, cls: ast.ClassDef) -> Iterator[Finding]:
+        fields = {}     # name -> lineno
+        post_init = None
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                ann = ast.unparse(stmt.annotation)
+                if not ann.startswith("ClassVar"):
+                    fields[stmt.target.id] = stmt.lineno
+            elif isinstance(stmt, ast.FunctionDef) and \
+                    stmt.name == "__post_init__":
+                post_init = stmt
+        if not fields:
+            return
+        mentioned = set()
+        if post_init is not None:
+            for node in ast.walk(post_init):
+                if isinstance(node, ast.Attribute) and \
+                        isinstance(node.value, ast.Name) and \
+                        node.value.id == "self":
+                    mentioned.add(node.attr)
+                elif isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str):
+                    mentioned.add(node.value)
+        for name, line in sorted(fields.items(), key=lambda kv: kv[1]):
+            if name not in mentioned:
+                yield Finding(
+                    "", line, self.code,
+                    f"ServeConfig.{name} is never validated in "
+                    "__post_init__: a bad value should die at construction "
+                    "with a clear message, not deep inside the engine")
+
+
+class JnpInLoop(Rule):
+    code = "RPR004"
+    name = "jnp-in-loop"
+    scope = "repro/core"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        findings: List[Finding] = []
+        rule = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.loop_depth = 0
+
+            def _loop(self, node):
+                self.loop_depth += 1
+                self.generic_visit(node)
+                self.loop_depth -= 1
+
+            visit_For = _loop
+            visit_While = _loop
+
+            # a nested function def is traced/called elsewhere; don't
+            # charge its body to the enclosing loop
+            def _func(self, node):
+                saved, self.loop_depth = self.loop_depth, 0
+                self.generic_visit(node)
+                self.loop_depth = saved
+
+            visit_FunctionDef = _func
+            visit_AsyncFunctionDef = _func
+
+            def visit_Call(self, node):
+                if self.loop_depth and _call_root(node.func) in ("jnp", "jax"):
+                    findings.append(Finding(
+                        "", node.lineno, rule.code,
+                        f"{ast.unparse(node.func)}() inside a Python-level "
+                        "loop dispatches one XLA op per iteration on the "
+                        "host path; batch it or use numpy"))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        yield from findings
+
+
+class MetricsSurfaced(Rule):
+    code = "RPR005"
+    name = "metrics-unsurfaced"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == "EngineMetrics":
+                yield from self._check_class(node)
+
+    def _check_class(self, cls: ast.ClassDef) -> Iterator[Finding]:
+        counters = {}   # numeric field name -> lineno
+        summary = None
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                ann = ast.unparse(stmt.annotation)
+                if ann in ("int", "float"):
+                    counters[stmt.target.id] = stmt.lineno
+            elif isinstance(stmt, ast.FunctionDef) and stmt.name == "summary":
+                summary = stmt
+        read = set()
+        if summary is not None:
+            for node in ast.walk(summary):
+                if isinstance(node, ast.Attribute) and \
+                        isinstance(node.value, ast.Name) and \
+                        node.value.id == "self":
+                    read.add(node.attr)
+        for name, line in sorted(counters.items(), key=lambda kv: kv[1]):
+            if name not in read:
+                yield Finding(
+                    "", line, self.code,
+                    f"EngineMetrics.{name} is never read in summary(): "
+                    "write-only telemetry is invisible to benchmarks and "
+                    "the regression gate")
+
+
+RULES: Sequence[Rule] = (MutableDefault(), BareAssert(),
+                         ServeConfigValidated(), JnpInLoop(),
+                         MetricsSurfaced())
+
+
+def _iter_files(paths: Sequence[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        else:
+            yield path
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Sequence[str]] = None) -> List[Finding]:
+    rules = [r for r in RULES if select is None or r.code in select
+             or r.name in select]
+    findings: List[Finding] = []
+    for file in _iter_files(paths):
+        rel = str(file)
+        try:
+            tree = ast.parse(file.read_text(), filename=rel)
+        except SyntaxError as e:
+            findings.append(Finding(rel, e.lineno or 0, "RPR000",
+                                    f"syntax error: {e.msg}"))
+            continue
+        for rule in rules:
+            if not rule.applies(rel):
+                continue
+            findings.extend(f._replace(path=rel)
+                            for f in rule.check(tree, rel))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific AST lint (see module docstring for rules)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes/names to run "
+                         "(default: all)")
+    args = ap.parse_args(argv)
+    select = args.select.split(",") if args.select else None
+    findings = lint_paths(args.paths, select)
+    for f in findings:
+        print(f.render())
+    n_files = sum(1 for _ in _iter_files(args.paths))
+    print(f"{len(findings)} finding(s) in {n_files} file(s) "
+          f"[{', '.join(r.code for r in RULES)}]")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,8 @@ package instantiate it with the exact published numbers.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+import os
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 
@@ -180,6 +181,14 @@ class ServeConfig:
                                         # divergence) reuse via COW of the
                                         # tail page; page: full pages only
                                         # (PR-3 behaviour)
+    # --- runtime sanitizer (analysis/invariants.py) ---
+    # off:    never check (zero overhead; production default)
+    # finish: full cross-module validation after any step finishing a request
+    # step:   validate after every engine step (CI runs tier-1 under this)
+    # Defaults from $REPRO_SANITIZE so CI flips whole suites via the
+    # environment without touching individual tests.
+    sanitize_level: str = field(
+        default_factory=lambda: os.environ.get("REPRO_SANITIZE", "off"))
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
@@ -215,6 +224,33 @@ class ServeConfig:
         if self.sched_events_cap <= 0:
             raise ValueError(
                 f"sched_events_cap must be positive, got {self.sched_events_cap}")
+        for knob in ("max_batch", "token_budget", "page_size", "n_pages",
+                     "max_pages_per_seq", "max_seq_len", "prefill_chunk",
+                     "n_streams"):
+            value = getattr(self, knob)
+            if not isinstance(value, int) or isinstance(value, bool) \
+                    or value <= 0:
+                raise ValueError(
+                    f"{knob} must be a positive int, got {value!r}")
+        if self.n_pages < 2:
+            raise ValueError(
+                f"n_pages must be >= 2 (page n_pages-1 is the reserved "
+                f"trash page), got {self.n_pages}")
+        if not 0.0 <= self.watermark < 1.0:
+            raise ValueError(
+                f"watermark must be in [0, 1), got {self.watermark}")
+        if self.decode_reserve < 0:
+            raise ValueError(
+                f"decode_reserve must be >= 0, got {self.decode_reserve}")
+        if not isinstance(self.enable_prefix_cache, bool):
+            raise ValueError(
+                f"enable_prefix_cache must be a bool, got "
+                f"{self.enable_prefix_cache!r}")
+        from repro.analysis.invariants import SANITIZE_LEVELS
+        if self.sanitize_level not in SANITIZE_LEVELS:
+            raise ValueError(
+                f"unknown sanitize_level {self.sanitize_level!r}; "
+                f"supported: {', '.join(SANITIZE_LEVELS)}")
 
     @property
     def resolved_eviction_policy(self) -> str:

@@ -73,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.invariants import KVSanitizer
 from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
 from repro.core.metrics import EngineMetrics, EventRing
@@ -149,9 +150,11 @@ class Engine:
 
     def __init__(self, model, params, serve: ServeConfig, *,
                  time_fn=time.perf_counter):
-        assert model.cache_kind == "paged", (
-            f"Engine supports paged-cache archs; got {model.cache_kind} "
-            "(state/encdec/hybrid serve paths are exercised via launch/dryrun)")
+        if model.cache_kind != "paged":
+            raise TypeError(
+                f"Engine supports paged-cache archs; got {model.cache_kind} "
+                "(state/encdec/hybrid serve paths are exercised via "
+                "launch/dryrun)")
         self.model = model
         self.cfg = model.cfg
         self.serve = serve
@@ -184,6 +187,10 @@ class Engine:
         self._events: List[TokenEvent] = []
         self._outputs: List[RequestOutput] = []
         self.sched = Scheduler(self)
+        # read-only runtime invariant checker (analysis/invariants.py);
+        # None at the default "off" level so hot paths pay one None test
+        self.sanitizer = (KVSanitizer(self)
+                          if serve.sanitize_level != "off" else None)
         self._build_jits()
 
     @property
@@ -410,10 +417,13 @@ class Engine:
         hit as a private COW copy of its donor page, and return the exact
         cached token count.  Prefill then starts at the first uncached
         token — possibly mid-page."""
+        cache = self.prefix_cache
+        if cache is None:
+            return 0
         n, pages, partial = self._cache_match(req.prefill_tokens)
         if pages:
             self.alloc.share(req.rid, pages)
-            self.prefix_cache.touch(pages)
+            cache.touch(pages)
         if partial is not None:
             donor, _ = partial
             # the copy needs a destination page now, plus the transient
@@ -424,7 +434,7 @@ class Engine:
             headroom = 1 + (0 if self.alloc.is_referenced(donor) else 1)
             if self.alloc.n_free >= headroom:
                 pair = self.alloc.cow_partial(req.rid, donor)
-                self.prefix_cache.touch([donor])
+                cache.touch([donor])
                 self._apply_cow([pair])
                 self.metrics.n_partial_hits += 1
             else:
@@ -509,6 +519,9 @@ class Engine:
         self.metrics.step_kinds.append(kind)
         self.metrics.kv_usage_trace.append(self.alloc.usage())
         self._refresh_cache_stats()
+        if self.sanitizer is not None:
+            self.sanitizer.after_step(
+                any(e.finish_reason is not None for e in self._events))
         return self._events
 
     # --- sequential: full-prompt prefill OR decode per step -----------------
@@ -627,6 +640,8 @@ class Engine:
         """First token after a (re-)prefill; a resumed request keeps its
         original TTFT."""
         self.unregister_inflight(req.rid)   # prefill committed: twins now hit
+        if self.sanitizer is not None:      # close the admission budget loop
+            self.sanitizer.note_first_token(req.rid)
         m = self.metrics.req(req.rid)
         if m.t_first_token is None:
             m.t_first_token = t
@@ -754,9 +769,8 @@ class Engine:
             n = min(C, len(st.tokens) - st.pos)
             if n <= 0:
                 continue
-            if st.pos + n >= len(st.tokens):         # completing chunk
-                if free_slots <= 0:
-                    continue
+            if st.pos + n >= len(st.tokens) and free_slots <= 0:
+                continue                             # completing chunk, no slot
             if self.serve.preempt_policy != "none" and \
                     not self.sched.ensure_pages(st.req, st.pos + n + 1,
                                                 protect=protect):

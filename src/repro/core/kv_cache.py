@@ -40,6 +40,10 @@ class PageAllocator:
     _free: List[int] = field(default_factory=list)
     _owned: Dict[int, List[int]] = field(default_factory=dict)  # rid -> pages
     _ref: Dict[int, int] = field(default_factory=dict)          # page -> refs
+    # rid -> free-pool capacity consumed since its last begin_admission():
+    # fresh allocs + reclaimable revives + COW copies.  The sanitizer checks
+    # this against the pages the scheduler charged at admission.
+    _consumed: Dict[int, int] = field(default_factory=dict)
     n_reclaims: int = 0      # cached pages stripped back into the free list
     n_cow: int = 0           # copy-on-write page splits
     n_shared_maps: int = 0   # cache-hit pages mapped via share()
@@ -95,6 +99,19 @@ class PageAllocator:
     def can_alloc(self, n: int) -> bool:
         return self.n_free >= n
 
+    def begin_admission(self, rid: int) -> None:
+        """Reset ``rid``'s consumed-capacity counter; the scheduler calls
+        this at admission so the sanitizer can bound what the prefill
+        actually takes from the free pool against the admission budget."""
+        self._consumed[rid] = 0
+
+    def consumed(self, rid: int) -> int:
+        """Free-pool capacity ``rid`` consumed since its admission."""
+        return self._consumed.get(rid, 0)
+
+    def _consume(self, rid: int, n: int = 1) -> None:
+        self._consumed[rid] = self._consumed.get(rid, 0) + n
+
     def _event(self, ev: str, **detail) -> None:
         if self.event_cb is not None:
             self.event_cb(ev, **detail)
@@ -122,6 +139,7 @@ class PageAllocator:
         for p in pages:
             self._ref[p] = 1
         self._owned.setdefault(rid, []).extend(pages)
+        self._consume(rid, n)
         return pages
 
     def share(self, rid: int, pages: List[int]) -> None:
@@ -132,7 +150,13 @@ class PageAllocator:
         for p in pages:
             refs = self._ref.get(p, 0)
             if refs == 0:
+                if self.cache is None:
+                    raise RuntimeError(
+                        f"share() got unreferenced page {p} with no prefix "
+                        "cache attached: only reclaimable cached pages can "
+                        "be revived")
                 self.cache.on_revive(p)
+                self._consume(rid)   # a revive takes reclaimable capacity
             self._ref[p] = refs + 1
         self._owned.setdefault(rid, []).extend(pages)
         self.n_shared_maps += len(pages)
@@ -172,6 +196,7 @@ class PageAllocator:
             pages[idx] = new
             self._release_one(p)
             pairs.append((p, new))
+            self._consume(rid)
             self.n_cow += 1
             self._event("cow", rid=rid, src=p, dst=new)
         return pairs
@@ -193,7 +218,11 @@ class PageAllocator:
         self.share(rid, [src])
         idx = len(self._owned[rid]) - 1
         pairs = self.prepare_write(rid, idx * self.page_size, 1)
-        assert len(pairs) == 1 and pairs[0][0] == src, (pairs, src)
+        if len(pairs) != 1 or pairs[0][0] != src:
+            raise RuntimeError(
+                f"cow_partial: expected exactly one copy-on-write pair for "
+                f"donor page {src}, got {pairs}; the freshly shared donor "
+                "must be the page prepare_write copies")
         self.n_partial_cow += 1
         return pairs[0]
 
@@ -211,6 +240,8 @@ class PageAllocator:
             self.cache.on_release(page)     # park reclaimable, not free
         else:
             self._free.append(page)
+            if self.cache is not None:
+                self.cache.orphaned_shared.discard(page)
         return True
 
     def free(self, rid: int) -> int:
@@ -218,4 +249,5 @@ class PageAllocator:
         became available (shared pages only decref — they stay with
         their other readers)."""
         pages = self._owned.pop(rid, [])
+        self._consumed.pop(rid, None)
         return sum(self._release_one(p) for p in reversed(pages))

@@ -84,7 +84,8 @@ class RequestMetrics:
     def tbt(self) -> Optional[float]:
         if len(self.token_times) < 2:
             return None
-        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:],
+                                      strict=False)]
         return sum(gaps) / len(gaps)
 
 
@@ -147,6 +148,9 @@ class EngineMetrics:
             "n_preemptions": sum(r.n_preempted for r in self.requests.values()),
             "n_preempted_requests": sum(
                 1 for r in self.requests.values() if r.n_preempted),
+            # lossless engine-side counter; equals n_preemptions unless the
+            # event ring dropped (kept separate as the step-kind source)
+            "n_preempt_events": self.n_preempt_events,
             "finish_reasons": {
                 reason: sum(1 for r in done if r.finish_reason == reason)
                 for reason in sorted({r.finish_reason for r in done

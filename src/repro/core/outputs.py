@@ -48,5 +48,6 @@ class RequestOutput:
     def tbt(self) -> Optional[float]:
         if len(self.token_times) < 2:
             return None
-        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:],
+                                      strict=False)]
         return sum(gaps) / len(gaps)

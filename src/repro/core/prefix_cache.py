@@ -121,6 +121,12 @@ class PrefixCache:
         self._roots: Dict[Tuple[int, ...], _Node] = {}  # depth-0 child links
         self._by_page: Dict[int, _Node] = {}
         self._reclaimable: Dict[int, _Node] = {}    # page -> node, ref == 0
+        # pages evicted from the trie by the blocked-subtree fallback while
+        # still mapped by live requests: they may legitimately stay
+        # multi-referenced without being cached (the sanitizer's COW-
+        # exclusivity check exempts them); cleared when the owners release
+        # the page or a finish re-registers it
+        self.orphaned_shared: set = set()
         self._tick = 0
         self._next_nid = _ROOT + 1
         self.n_evicted = 0   # reclaimed/evicted nodes (engine stats)
@@ -208,11 +214,17 @@ class PrefixCache:
         ps = self.page_size
         n_full, rem = divmod(len(tokens), ps)
         if allow_partial:
-            assert len(pages) == n_full + (1 if rem else 0), \
-                (len(tokens), len(pages), ps)
-        else:
-            assert rem == 0 and len(pages) == n_full, \
-                (len(tokens), len(pages), ps)
+            if len(pages) != n_full + (1 if rem else 0):
+                raise ValueError(
+                    f"insert(allow_partial): {len(tokens)} tokens at "
+                    f"page_size {ps} need {n_full + (1 if rem else 0)} "
+                    f"pages, got {len(pages)}")
+        elif rem != 0 or len(pages) != n_full:
+            raise ValueError(
+                f"insert: expected whole pages ({len(tokens)} tokens at "
+                f"page_size {ps} -> {n_full} full pages, remainder {rem}), "
+                f"got {len(pages)} pages; trim the partial tail or pass "
+                "allow_partial=True at a terminal point")
         self._tick += 1
         new = 0
         parent: Optional[_Node] = None
@@ -249,6 +261,7 @@ class PrefixCache:
         self._next_nid += 1
         self._nodes[node.key] = node
         self._by_page[page] = node
+        self.orphaned_shared.discard(page)   # cached again: contract restored
         self._children_of(parent)[chunk] = node
         if parent is not None:
             anc = parent
@@ -359,6 +372,7 @@ class PrefixCache:
             stack.extend(node.children.values())
         for node in sorted(doomed, key=lambda n: -n.depth):
             self._evict(node)   # leaf-upward keeps child counts consistent
+            self.orphaned_shared.add(node.page)  # still owned, no longer cached
         return best             # now a leaf; caller evicts and returns it
 
     def _evict(self, node: _Node) -> None:

@@ -165,15 +165,20 @@ class Scheduler:
         bare = self._bare_pages(r)      # raises when it can never fit
         n_hit, n_free_hit, cow_extra = self.probe(r)
         need = self.admission_pages(r, n_free_hit, cow_extra)
+        override = False
         if need > budget:
             if not (first and self.alloc.n_allocated == 0):
                 return False, budget
             need = bare
+            override = True
         self.waiting.remove(r)
         self._wait_rounds.pop(r.rid, None)
+        self.alloc.begin_admission(r.rid)
         self.eng.register_inflight(r)
+        if self.eng.sanitizer is not None:
+            self.eng.sanitizer.note_admit(r.rid, need, override)
         self._event("admit", r.rid, pages=need, cached_pages=n_hit,
-                    resumed=bool(r.out_tokens))
+                    resumed=bool(r.out_tokens), override=override)
         return True, budget - need
 
     def _admit_up_to(self, limit: int) -> List:
@@ -283,6 +288,8 @@ class Scheduler:
         committed = victim.seq_len if kind == "slot" else victim.pos
         self.eng.cache_insert(r, committed, final=True)
         self.eng.unregister_inflight(r.rid)
+        if self.eng.sanitizer is not None:   # re-admission re-budgets
+            self.eng.sanitizer.note_preempt(r.rid)
         freed = self.alloc.free(r.rid)
         self.requeue(r)
         self.metrics.req(r.rid).n_preempted += 1

@@ -109,7 +109,10 @@ def flash_attention(
     Tk = k.shape[2]
     bq = min(block_q, T)
     bk = min(block_k, Tk)
-    assert T % bq == 0 and Tk % bk == 0, (T, bq, Tk, bk)
+    if T % bq or Tk % bk:
+        raise ValueError(
+            f"sequence lengths must tile evenly: T={T} vs block_q={bq}, "
+            f"Tk={Tk} vs block_k={bk}")
     grid = (B, KV_p, T // bq, Tk // bk)
 
     def q_map(b, h, iq, ik, *_):

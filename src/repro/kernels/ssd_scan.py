@@ -67,7 +67,8 @@ def ssd_chunk_scan(xdt, la, Bc, Cc, *, chunk: int = 64,
     h_final [B,H,P,N]). T must be a multiple of chunk."""
     B, H, T, P = xdt.shape
     N = Bc.shape[-1]
-    assert T % chunk == 0, (T, chunk)
+    if T % chunk:
+        raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
     nc = T // chunk
     grid = (B, H, nc)
 

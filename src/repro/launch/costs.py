@@ -283,7 +283,7 @@ def collective_bytes_loop_aware(hlo: str) -> Dict[str, int]:
         entry = next(iter(comps))
     total: Dict[str, int] = {}
     trips_of = {}
-    for name, c in comps.items():
+    for c in comps.values():
         for callee, kind in c["calls"]:
             if kind.startswith("cond_of:"):
                 body = kind.split(":", 1)[1]

@@ -90,7 +90,8 @@ def main():
         cells = [(a, s, m) for a in ASSIGNED for s in cells_for(a)
                  for m in meshes]
     else:
-        assert args.arch and args.shape
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape are required unless --all is set")
         cells = [(args.arch, args.shape, m) for m in meshes]
 
     rows, failures = [], 0

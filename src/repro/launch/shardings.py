@@ -89,9 +89,8 @@ def param_pspecs(shapes_tree, cfg, *, tp: int, fsdp_size: int = 1,
             s[-2] = F
         elif name == "out_proj":               # mamba [., d_in, D]
             s[-2], s[-1] = M, F
-        elif name in ("conv_x", "conv_b_x", "norm"):
-            s[-1] = M
-        elif name in ("qb", "kb", "vb"):       # zamba lora [13, r, H*hd]
+        elif name in ("conv_x", "conv_b_x", "norm",
+                      "qb", "kb", "vb"):       # + zamba lora [13, r, H*hd]
             s[-1] = M
         elif name in ("qa", "ka", "va"):       # [13, 2D, r]
             s[-2] = F

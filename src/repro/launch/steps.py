@@ -52,10 +52,9 @@ def sds(shape, dtype):
 
 
 def cell_supported(cfg, shape_name: str):
-    if shape_name == "long_500k":
-        if not cfg.supports_long_context:
-            return False, ("full-attention KV residency at 524288 ctx; "
-                           "needs context-streaming attention — skipped")
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention KV residency at 524288 ctx; "
+                       "needs context-streaming attention — skipped")
     if shape_name == "mixed_32k" and cfg.family not in ("dense", "moe", "vlm"):
         return False, "mixed fused step is transformer-family (paper cell)"
     return True, ""

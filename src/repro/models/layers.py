@@ -76,7 +76,8 @@ def flash_attention(
     """
     B, Tq, H, d = q.shape
     Tk, KV = k.shape[1], k.shape[2]
-    assert H % KV == 0, (H, KV)
+    if H % KV:
+        raise ValueError(f"query heads H={H} must be a multiple of KV={KV}")
     G = H // KV
 
     orig_tk = Tk

@@ -55,12 +55,18 @@ def gqa_layout(H: int, KV: int, tp: int = 1):
     if KV % tp == 0:
         KV_p = KV
     else:
-        assert KV < tp and tp % KV == 0 or KV < tp, (H, KV, tp)
+        if not KV < tp:
+            raise ValueError(
+                f"KV heads ({KV}) must divide or be smaller than tp={tp} "
+                f"to replicate into padded slots (H={H})")
         KV_p = tp * math.ceil(KV / tp)
-        assert KV_p % KV == 0, (KV, tp)
+        if KV_p % KV:
+            raise ValueError(
+                f"padded KV heads {KV_p} not a multiple of KV={KV} (tp={tp})")
     R = KV_p // KV
+    if H % KV:
+        raise ValueError(f"query heads H={H} must be a multiple of KV={KV}")
     G = H // KV
-    assert H % KV == 0, (H, KV)
     G_p = math.ceil(G / R)
     H_p = KV_p * G_p
     q_map = np.full(H_p, -1, np.int32)
@@ -544,5 +550,8 @@ def init_pages(cfg, n_pages, page_size, tp=1, dtype=jnp.float32,
 def kv_to_pages(kv, page_size):
     """Prefill output [L, B, S, KV_p, hd] -> pages [L, B*S/ps, ps, KV_p, hd]."""
     L, B, S, KVp, hd = kv.shape
-    assert S % page_size == 0
+    if S % page_size:
+        raise ValueError(
+            f"prefill length S={S} must be page-aligned (page_size="
+            f"{page_size}); callers pad the token batch to whole pages")
     return kv.reshape(L, B * (S // page_size), page_size, KVp, hd)

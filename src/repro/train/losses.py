@@ -76,7 +76,9 @@ def _vtiled_ce(hidden2d, labels1d, table, softcap, v_real, vtile):
 
 def _tiles(table, vtile):
     Vp, D = table.shape
-    assert Vp % vtile == 0, (Vp, vtile)
+    if Vp % vtile:
+        raise ValueError(
+            f"padded vocab {Vp} must be a multiple of vtile={vtile}")
     return table.reshape(Vp // vtile, vtile, D)
 
 

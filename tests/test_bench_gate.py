@@ -51,6 +51,25 @@ def test_count_and_completion_regressions_fail():
     assert "tokens_match" in msgs and "n_partial_hits" in msgs
 
 
+def test_scheduler_health_counters_gated():
+    base = {
+        "rows": [{"bench": "pressure_oversubscribed", "x": "mps",
+                  "n_preemptions": 3, "n_preempted_requests": 2,
+                  "n_reclaims": 5, "seed_crash": True}],
+        "checks": [],
+    }
+    fresh = copy.deepcopy(base)
+    fresh["rows"][0]["n_preemptions"] = 9      # thrash: max-gated
+    fresh["rows"][0]["seed_crash"] = False     # pool no longer oversubscribed
+    msgs = "\n".join(compare(base, fresh))
+    assert "n_preemptions" in msgs and "seed_crash" in msgs
+    # fewer preemptions/reclaims is an improvement, not a regression
+    fresh = copy.deepcopy(base)
+    fresh["rows"][0]["n_preemptions"] = 0
+    fresh["rows"][0]["n_reclaims"] = 0
+    assert compare(base, fresh) == []
+
+
 def test_timing_fields_ignored():
     fresh = copy.deepcopy(BASELINE)
     fresh["rows"][0]["throughput_tok_s"] = 1.0     # 1000x slower: not gated
@@ -102,5 +121,7 @@ def test_committed_baseline_is_self_consistent():
         baseline = json.load(fp)
     assert baseline["rows"], "baseline has no rows"
     benches = {r["bench"] for r in baseline["rows"]}
-    assert {"shared_prefix", "midpage_divergence", "midpage_delta"} <= benches
+    assert {"shared_prefix", "midpage_divergence", "midpage_delta",
+            "pressure_oversubscribed", "policy_sweep",
+            "policy_sweep_delta"} <= benches
     assert compare(baseline, copy.deepcopy(baseline)) == []

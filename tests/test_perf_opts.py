@@ -27,7 +27,7 @@ def test_vtiled_ce_matches_chunked(softcap):
     g2 = jax.grad(lambda h, t: lm_loss_from_hidden_vtiled(
         h, labels, t, softcap=softcap, v_real=vreal, vtile=128)[0], (0, 1))(
         hidden, table)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
@@ -54,7 +54,7 @@ def test_flash_ckpt_bwd_matches_autodiff(window, cap):
     assert abs(float(f_ref(q, k, v)) - float(f_new(q, k, v))) < 1e-3
     g1 = jax.grad(f_ref, (0, 1, 2))(q, k, v)
     g2 = jax.grad(f_new, (0, 1, 2))(q, k, v)
-    for a, b in zip(g1, g2):
+    for a, b in zip(g1, g2, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 

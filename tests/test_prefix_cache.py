@@ -283,7 +283,7 @@ def test_trie_partial_tail_needs_explicit_opt_in():
     # 6 tokens = 1 full page + a partial tail: mid-flight inserts must
     # trim to full pages (the tail is still being written); only
     # terminal inserts may register it (token-level reuse opt-in)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         cache.insert(list(range(6)), pages)
     cache.insert(list(range(4)), pages[:1])
     assert cache.match(list(range(6))) == pages[:1]

@@ -30,7 +30,7 @@ def test_param_specs_divisible_at_tp16(arch):
         specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
     assert len(flat_shapes) == len(flat_specs)
     n_sharded = 0
-    for leaf, spec in zip(flat_shapes, flat_specs):
+    for leaf, spec in zip(flat_shapes, flat_specs, strict=True):
         for i, ax in enumerate(spec):
             if ax is None:
                 continue

@@ -74,7 +74,7 @@ def test_partial_insert_registers_leaf_with_valid_length():
     alloc = PageAllocator(16, PS, cache=cache)
     p = alloc.alloc(1, 2)
     # default contract unchanged: partial tails need explicit opt-in
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         cache.insert(list(range(6)), p)
     cache.insert(list(range(6)), p, allow_partial=True)
     node = cache._by_page[p[1]]

@@ -59,7 +59,8 @@ def test_microbatch_matches_full_batch():
     s2 = init_state(model, jax.random.PRNGKey(0), t_micro)
     s1, m1 = jax.jit(make_train_step(model, t_full))(s1, batch)
     s2, m2 = jax.jit(make_train_step(model, t_micro))(s2, batch)
-    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"]), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
@@ -81,7 +82,7 @@ def test_crash_resume_bitwise():
     assert t2.start_step == 10
     t2.run()
     p_res = jax.tree.leaves(jax.tree.map(np.asarray, t2.state["params"]))
-    for a, b in zip(p_ref, p_res):
+    for a, b in zip(p_ref, p_res, strict=True):
         assert np.array_equal(a, b)
 
 
@@ -132,5 +133,5 @@ def test_checkpoint_roundtrip_structure():
     assert latest_step(tcfg.ckpt_dir) == 7
     back = load(tcfg.ckpt_dir, 7)
     for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, state)),
-                    jax.tree.leaves(back)):
+                    jax.tree.leaves(back), strict=True):
         assert np.array_equal(np.asarray(a), b)
