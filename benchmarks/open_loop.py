@@ -10,7 +10,21 @@ see at a given offered load, per engine mode.
 Arrival times live on the engine's virtual clock (idle gaps are
 fast-forwarded), so the scenario is deterministic in shape and runs at
 full speed regardless of the offered rate.
+
+Two arms:
+
+* ``open_loop_poisson`` — wall-clock TTFT/TBT at Poisson load (numbers
+  vary across runners; NOT baseline-gated);
+* ``open_loop_det`` — the same admission machinery driven by a counting
+  clock (every ``now()`` reading advances a fixed virtual tick), so the
+  TTFT percentiles are pure functions of the scheduling trace and CI can
+  gate them exactly (``regression_gate.py``).  The arm also runs with
+  the jit-dispatch sentinel enabled and reports post-warmup recompiles —
+  the compiled-once guarantee, measured on a served workload.  Smoke
+  mode (``--smoke``) runs only this arm.
 """
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import make_requests, model_and_params, serve_cfg
@@ -19,6 +33,24 @@ from repro.core.engine import Engine
 N_REQ, INPUT, OUTPUT = 10, 48, 12
 RATES = (5.0, 50.0)          # offered load, requests per virtual second
 MODES = ["sequential", "splitwiser_mps"]
+
+# virtual seconds between deterministic-arm arrivals: a few engine steps
+# apart under the counting clock, so admission happens mid-serve
+DET_GAP = 0.01
+
+
+class _CountingClock:
+    """Deterministic time source: each reading advances one fixed tick,
+    so latency metrics are pure functions of how many times the engine
+    consulted the clock — identical on any runner."""
+
+    def __init__(self, tick: float = 1e-4):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
 
 
 def _agg(vals):
@@ -29,9 +61,12 @@ def _agg(vals):
             round(float(np.median(vals)), 4))
 
 
-def rows():
-    model, params = model_and_params("opt-125m")
-    V = model.cfg.vocab_size
+def _vp(vals, q):
+    vals = [v for v in vals if v is not None]
+    return None if not vals else round(float(np.percentile(vals, q)), 4)
+
+
+def _poisson_rows(model, params, V):
     out = []
     for mode in MODES:
         sc = serve_cfg(mode, n_requests=N_REQ, input_tokens=INPUT,
@@ -61,3 +96,51 @@ def rows():
                 n_preempted=sum(by_rid[r].n_preempted for r in by_rid),
             ))
     return out
+
+
+def _det_rows(model, params, V):
+    out = []
+    arrivals = [i * DET_GAP for i in range(N_REQ)]
+    for mode in MODES:
+        sc = dataclasses.replace(
+            serve_cfg(mode, n_requests=N_REQ, input_tokens=INPUT,
+                      output_tokens=OUTPUT, max_batch=8),
+            dispatch_sentinel=True)
+        eng = Engine(model, params, sc, time_fn=_CountingClock())
+        # two warmup replays on the same engine: the first compiles the
+        # cold-cache shapes, the second the warm-prefix-cache shapes the
+        # measured run will see — only then is "compiled once" checkable
+        for base in (1000, 2000):
+            warm = make_requests(N_REQ, INPUT, OUTPUT, V, arrivals=arrivals)
+            for r in warm:
+                r.rid += base
+            eng.run(warm, open_loop=True, max_steps=100_000)
+        eng.poll()
+        eng.dispatch.mark_warm()
+        reqs = make_requests(N_REQ, INPUT, OUTPUT, V, arrivals=arrivals)
+        events = list(eng.stream(reqs, open_loop=True, max_steps=100_000))
+        outputs = eng.poll()
+        firsts = {e.rid: e.t for e in events if e.first}
+        ttfts = [o.ttft for o in outputs]
+        out.append(dict(
+            bench="open_loop_det", x=mode,
+            n_requests=N_REQ, n_done=len(outputs),
+            all_complete=all(o.finish_reason == "length" for o in outputs),
+            respects_arrivals=all(
+                firsts[o.rid] >= o.arrival for o in outputs),
+            # virtual-clock percentiles: deterministic, baseline-gated
+            ttft_vp50=_vp(ttfts, 50), ttft_vp95=_vp(ttfts, 95),
+            n_preempted=sum(o.n_preempted for o in outputs),
+            dispatch_post_warm=sum(
+                eng.dispatch.post_warm_compiles().values()),
+        ))
+    return out
+
+
+def rows(smoke: bool = False):
+    model, params = model_and_params("opt-125m")
+    V = model.cfg.vocab_size
+    det = _det_rows(model, params, V)
+    if smoke:
+        return det
+    return _poisson_rows(model, params, V) + det

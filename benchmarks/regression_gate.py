@@ -16,11 +16,13 @@ baseline must not flip from pass to fail.
 
     # refresh the committed baseline after an intentional change:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep --json BENCH_baseline.json
+        --only shared_prefix,pressure,policy_sweep,open_loop \
+        --json BENCH_baseline.json
 
     # what CI runs on every PR:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep --json bench_fresh.json
+        --only shared_prefix,pressure,policy_sweep,open_loop \
+        --json bench_fresh.json
     PYTHONPATH=src python -m benchmarks.regression_gate \
         BENCH_baseline.json bench_fresh.json
 """
@@ -48,10 +50,19 @@ GATED_FIELDS = {
     "n_preemptions": ("max", "count"),
     "n_preempted_requests": ("max", "count"),
     "n_reclaims": ("max", "count"),
+    # open_loop_det rows: TTFT percentiles on the counting clock are pure
+    # functions of the scheduling trace, so they gate exactly like counts
+    # (a scheduler change that delays first tokens shows up here), and a
+    # post-warmup recompile breaks the compiled-once guarantee outright
+    "ttft_vp50": ("max", "count"),
+    "ttft_vp95": ("max", "count"),
+    "n_preempted": ("max", "count"),
+    "dispatch_post_warm": ("max", "count"),
 }
 # must not flip true -> false (seed_crash rows record True: the
 # oversubscribed pool *must* crash the seed admission policy)
-BOOL_FIELDS = ("all_complete", "tokens_match", "seed_crash")
+BOOL_FIELDS = ("all_complete", "tokens_match", "seed_crash",
+               "respects_arrivals")
 
 
 def _rows_by_key(report: dict) -> dict:

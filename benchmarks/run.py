@@ -37,7 +37,7 @@ def main() -> None:
         ("splitwiser_vllm", splitwiser_vllm.rows, False),   # Figs 10-11
         ("batching", batching.rows, False),                 # Figs 12-13
         ("pressure", pressure.rows, False),                 # beyond-paper: KV pressure
-        ("open_loop", open_loop.rows, False),               # beyond-paper: Poisson arrivals
+        ("open_loop", open_loop.rows, True),                # beyond-paper: Poisson arrivals
         ("shared_prefix", shared_prefix.rows, False),       # beyond-paper: prefix cache
         ("policy_sweep", policy_sweep.rows, True),          # beyond-paper: policy matrix
         ("sanitizer_overhead", sanitizer_overhead.rows, False),  # analysis layer cost
@@ -110,6 +110,16 @@ def main() -> None:
             checks.append(("every first token lands at/after its request's "
                            "arrival (timed admission)",
                            all(r["respects_arrivals"] for r in ol)))
+        od = by("open_loop_det")
+        if od:
+            checks.append(("deterministic open-loop arm finishes every "
+                           "request with timed admission honored",
+                           all(r["n_done"] == r["n_requests"]
+                               and r["all_complete"]
+                               and r["respects_arrivals"] for r in od)))
+            checks.append(("serving hot path stays compiled-once: zero "
+                           "post-warmup recompiles on the served workload",
+                           all(r["dispatch_post_warm"] == 0 for r in od)))
         sp = by("shared_prefix_delta")
         if sp:
             k1 = [r for r in sp if "K=1" in str(r["x"])][0]
@@ -166,8 +176,13 @@ def main() -> None:
         so = by("sanitizer_overhead_delta")
         if so:
             checks.append(("sanitizer is read-only: greedy token streams "
-                           "bit-identical across off/finish/step",
+                           "bit-identical across off/finish/step/call",
                            all(r["tokens_match"] for r in so)))
+        soh = by("sanitizer_overhead")
+        if soh:
+            checks.append(("dispatch sentinel sees zero post-warmup "
+                           "recompiles at every sanitize level",
+                           all(r["dispatch_post_warm"] == 0 for r in soh)))
     if checks:
         print("\n== paper-claim validation ==")
     ok = True

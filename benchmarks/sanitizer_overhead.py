@@ -11,15 +11,25 @@ reclaim, budget accounting) — at each level:
     finish  full validation only after steps that finish a request
     soundness for CI-by-sampling; near-zero steady-state cost
     step    full validation after every step (CI tier-1 mode)
+    call    step, plus per-mutator invariant subsets at every mutating
+            PageAllocator/PrefixCache call (analysis/hooks.py) — the
+            bug-attribution tier
 
-Per (scenario, level): timed second run on a pre-compiled engine (the
-first run absorbs jit compilation), microseconds per step, number of
-full-state validations performed, and the overhead percentage vs the
-``off`` arm.  A delta row per scenario asserts the greedy token streams
-are bit-identical across levels — the sanitizer is read-only by
-contract, and this is where that claim is continuously measured.
-Numbers feed the EXPERIMENTS.md recommendation (step in CI, finish for
-local debugging, off in production).
+Every arm also runs with the jit-dispatch sentinel enabled
+(``ServeConfig.dispatch_sentinel``), so each row reports total compiles
+and post-warmup recompiles per cell — the compiled-once guarantee is
+measured on the same workloads that price the sanitizer.
+
+Per (scenario, level): timed third run on a pre-compiled engine (two
+warmup replays absorb jit compilation for both cold- and
+warm-prefix-cache batch shapes, then ``mark_warm`` snapshots the compile
+counts), microseconds per step, number of full-state validations and
+call-site checks performed, and the overhead percentage vs the ``off``
+arm.  A delta row per scenario asserts the greedy token streams are
+bit-identical across levels — the sanitizer is read-only by contract,
+and this is where that claim is continuously measured.  Numbers feed the
+EXPERIMENTS.md recommendation (step in CI, call for bug hunts, finish
+for local debugging, off in production).
 
     PYTHONPATH=src python -m benchmarks.sanitizer_overhead
 """
@@ -34,7 +44,7 @@ from benchmarks.shared_prefix import _requests as shared_requests
 from benchmarks.shared_prefix import serve_cfg
 from repro.core.engine import Engine
 
-LEVELS = ("off", "finish", "step")
+LEVELS = ("off", "finish", "step", "call")
 MODE = "splitwiser_mps"
 SP_N, SP_K = 8, 2
 
@@ -75,9 +85,14 @@ def rows():
         base_us = None
         streams = {}
         for level in LEVELS:
-            eng = Engine(model, params, cfg_fn(level))
-            eng.run(_workload(scenario, vocab, 0), max_steps=40_000)  # compile
-            reqs = _workload(scenario, vocab, 1000)
+            cfg = dataclasses.replace(cfg_fn(level), dispatch_sentinel=True)
+            eng = Engine(model, params, cfg)
+            # two warmup replays: the first compiles cold-cache shapes,
+            # the second the warm-prefix-cache shapes the timed run sees
+            eng.run(_workload(scenario, vocab, 0), max_steps=40_000)
+            eng.run(_workload(scenario, vocab, 1000), max_steps=40_000)
+            eng.dispatch.mark_warm()
+            reqs = _workload(scenario, vocab, 2000)
             n0 = eng.metrics.n_steps
             t0 = time.perf_counter()
             eng.run(reqs, max_steps=40_000)
@@ -87,12 +102,17 @@ def rows():
             if level == "off":
                 base_us = us_per_step
             streams[level] = [r.out_tokens for r in reqs]
+            san = eng.sanitizer
             out.append(dict(
                 bench="sanitizer_overhead", x=f"{scenario}/{level}",
                 n_requests=len(reqs),
                 n_done=sum(1 for r in reqs if r.out_tokens),
                 n_steps=n_steps,
-                n_checks=0 if eng.sanitizer is None else eng.sanitizer.n_checks,
+                n_checks=0 if san is None else san.n_checks,
+                n_call_checks=0 if san is None else san.n_call_checks,
+                dispatch_compiles=eng.dispatch.total_compiles,
+                dispatch_post_warm=sum(
+                    eng.dispatch.post_warm_compiles().values()),
                 wall_s=round(wall, 4),
                 us_per_step=round(us_per_step, 1),
                 overhead_pct=round(100.0 * (us_per_step - base_us) / base_us, 2),

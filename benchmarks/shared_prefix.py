@@ -166,17 +166,27 @@ def main():
             s, reqs = _run(model, params, args.mode, 1, cache, n_req=4)
             res[cache] = (s, [r.out_tokens for r in reqs])
         on, off = res[True][0], res[False][0]
-        assert res[True][1] == res[False][1], \
-            "greedy outputs diverge with prefix cache on"
-        assert on["cache_hit_rate"] > 0, "no cache hits on K=1 workload"
-        assert on["prefill_tokens_computed"] < off["prefill_tokens_computed"]
+        if res[True][1] != res[False][1]:
+            raise RuntimeError("greedy outputs diverge with prefix cache on")
+        if on["cache_hit_rate"] <= 0:
+            raise RuntimeError("no cache hits on K=1 workload")
+        if on["prefill_tokens_computed"] >= off["prefill_tokens_computed"]:
+            raise RuntimeError(
+                "prefix cache did not reduce prefill tokens computed")
         delta = [r for r in midpage_rows(mode=args.mode)
                  if r["bench"] == "midpage_delta"][0]
-        assert delta["tokens_match"], \
-            "greedy outputs diverge across cache granularities"
-        assert delta["prefill_tokens_token"] < delta["prefill_tokens_page"], \
-            "token-level caching did not beat full-page on mid-page divergence"
-        assert delta["hit_rate_page"] == 0 and delta["n_partial_hits"] > 0
+        if not delta["tokens_match"]:
+            raise RuntimeError(
+                "greedy outputs diverge across cache granularities")
+        if delta["prefill_tokens_token"] >= delta["prefill_tokens_page"]:
+            raise RuntimeError(
+                "token-level caching did not beat full-page on "
+                "mid-page divergence")
+        if delta["hit_rate_page"] != 0 or delta["n_partial_hits"] <= 0:
+            raise RuntimeError(
+                "mid-page scenario regressed: expected zero full-page hits "
+                f"(got {delta['hit_rate_page']}) and some partial hits "
+                f"(got {delta['n_partial_hits']})")
         print(f"smoke ok: hit_rate={on['cache_hit_rate']:.3f} "
               f"prefill {off['prefill_tokens_computed']}"
               f"->{on['prefill_tokens_computed']} "

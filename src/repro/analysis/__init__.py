@@ -1,14 +1,26 @@
-# Invariant-analysis layer for the serving stack: a runtime sanitizer
+# Execution-analysis layer for the serving stack: a runtime sanitizer
 # (invariants.py) that validates the cross-module allocator/trie/scheduler
-# contract after engine steps, and an AST lint (lint.py) encoding
-# repo-specific pitfalls learned from real fixed bugs.
+# contract after engine steps, call-site hooks (hooks.py) that attribute
+# violations to the exact mutating call at sanitize_level="call", a
+# cross-mode differential harness (differential.py), a jit-dispatch
+# sentinel (dispatch.py) that proves the hot path stays compiled-once,
+# and an AST lint (lint.py) encoding repo-specific pitfalls learned from
+# real fixed bugs.
 #
 # This package must stay importable without jax/numpy: the lint runs in
 # CI environments (and pre-commit hooks) that never install the heavy
 # deps, so keep module-level imports stdlib-only.
-from repro.analysis.invariants import (InvariantViolation, KVSanitizer,
-                                       SANITIZE_LEVELS, verify_state)
+from repro.analysis.differential import (diff_fingerprints, run_cross_mode,
+                                         state_fingerprint)
+from repro.analysis.dispatch import DispatchSentinel
+from repro.analysis.hooks import CallHooks, install_call_hooks
+from repro.analysis.invariants import (CHECKS, InvariantViolation, KVSanitizer,
+                                       SANITIZE_LEVELS, verify_state,
+                                       verify_subset)
 
 __all__ = [
-    "InvariantViolation", "KVSanitizer", "SANITIZE_LEVELS", "verify_state",
+    "CHECKS", "CallHooks", "DispatchSentinel", "InvariantViolation",
+    "KVSanitizer", "SANITIZE_LEVELS", "diff_fingerprints",
+    "install_call_hooks", "run_cross_mode", "state_fingerprint",
+    "verify_state", "verify_subset",
 ]

@@ -16,6 +16,24 @@ Gating (``ServeConfig.sanitize_level``)
                 interact, which is where past bugs clustered.
     ``step``    run the full check after *every* engine step (CI mode;
                 tier-1 and the hypothesis suite run under this level).
+    ``call``    everything ``step`` does, plus call-site hooks
+                (``analysis/hooks.py``) around every mutating
+                ``PageAllocator``/``PrefixCache`` entry point: the
+                relevant invariant subset runs at the mutator's exit, so
+                a violation is attributed to the exact call (method,
+                args digest, request id, event tail) instead of
+                "somewhere before the step boundary".
+
+At any level above ``off`` the sanitizer also runs the **differential
+preempt/resume checker**: at preemption it snapshots the victim's
+committed cached pages that other live requests keep referenced — the
+exact pages ``Engine.resume_safe_pages`` promises survive the eviction —
+and at the victim's re-admission verifies the resume remapped every
+promised page that is still cached (page ids, ownership, refcounts).  A
+promise may lapse only by eviction: if the page left the trie under
+pressure, recomputing it is legitimate; if it is still cached and the
+resume recomputed it anyway, prefix matching regressed and the checker
+fails loudly.
 
 Invariants checked
     * **page conservation** — the free list, the cache's reclaimable
@@ -56,7 +74,7 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, List, Optional, Tuple
 
-SANITIZE_LEVELS = ("off", "finish", "step")
+SANITIZE_LEVELS = ("off", "finish", "step", "call")
 
 _EVENT_TAIL = 16      # sched events carried in the violation report
 _NODE_DUMP_CAP = 64   # trie nodes listed in the state dump
@@ -70,15 +88,29 @@ class InvariantViolation(RuntimeError):
                     (e.g. ``"page_conservation"``, ``"refcount_honesty"``)
         state       allocator/trie/scheduler state dump at failure time
         events      tail of the scheduler event ring (post-mortem trace)
+        call_site   at ``sanitize_level="call"``: the mutating call the
+                    violation was detected at — ``method``, ``args``
+                    (digest), ``rid`` (when the first argument is one),
+                    ``n_call`` (how many times the method ran)
     """
 
     def __init__(self, invariant: str, message: str,
                  state: Optional[Dict[str, Any]] = None,
-                 events: Optional[List[dict]] = None):
+                 events: Optional[List[dict]] = None,
+                 call_site: Optional[Dict[str, Any]] = None):
         self.invariant = invariant
         self.state = state or {}
         self.events = list(events or [])
+        self.call_site = call_site or {}
         text = f"[{invariant}] {message}"
+        if self.call_site:
+            rid = self.call_site.get("rid")
+            text += (f"\n--- call site ---\n  "
+                     f"{self.call_site.get('method')}"
+                     f"({self.call_site.get('args', '')})"
+                     + ("" if rid is None else f"  [rid={rid}]")
+                     + (f"  (call #{self.call_site['n_call']})"
+                        if "n_call" in self.call_site else ""))
         if self.state:
             text += "\n--- state dump ---\n" + json.dumps(
                 self.state, indent=1, default=str, sort_keys=True)
@@ -135,7 +167,8 @@ def _state(alloc, cache, extra: Optional[Dict[str, Any]] = None) -> Dict[str, An
 
 
 # ------------------------------------------------------------- checkers ----
-def _check_page_conservation(fail, alloc, cache) -> None:
+def _check_page_conservation(fail, alloc, cache,
+                             exempt: frozenset = frozenset()) -> None:
     free_list = list(alloc._free)
     free = set(free_list)
     if len(free) != len(free_list):
@@ -156,12 +189,19 @@ def _check_page_conservation(fail, alloc, cache) -> None:
             fail("page_conservation",
                  f"page sets overlap ({name}): {sorted(inter)}")
     usable = alloc.n_pages - 1
-    total = len(free) + len(live) + len(recl)
+    # ``exempt``: pages legitimately in transit at a call-site check —
+    # e.g. the page ``pop_reclaimable`` just returned sits in the
+    # caller's hands, in no bucket, until the caller re-registers it.
+    in_transit = {p for p in exempt
+                  if p not in free and p not in live and p not in recl}
+    total = len(free) + len(live) + len(recl) + len(in_transit)
     if total != usable:
-        missing = set(range(usable)) - free - live - recl
+        missing = set(range(usable)) - free - live - recl - in_transit
         fail("page_conservation",
              f"free({len(free)}) + live({len(live)}) + "
-             f"reclaimable({len(recl)}) = {total} != pool size {usable}"
+             f"reclaimable({len(recl)}) = {total - len(in_transit)} != "
+             f"pool size {usable}"
+             + (f" (exempt in-transit: {sorted(in_transit)})" if in_transit else "")
              + (f"; leaked pages {sorted(missing)}" if missing else ""))
     if alloc.n_free != len(free) + len(recl):
         fail("page_conservation",
@@ -169,7 +209,8 @@ def _check_page_conservation(fail, alloc, cache) -> None:
              f"free+reclaimable is {len(free) + len(recl)}")
 
 
-def _check_refcount_honesty(fail, alloc) -> None:
+def _check_refcount_honesty(fail, alloc, cache=None) -> None:
+    del cache  # uniform checker signature; refcounts are allocator-local
     for page, refs in alloc._ref.items():
         if refs < 1:
             fail("refcount_honesty",
@@ -308,8 +349,41 @@ def _check_trie_structure(fail, alloc, cache) -> None:
                  "would serve stale KV after it is reallocated")
 
 
-_STATE_CHECKS = (_check_page_conservation, _check_refcount_honesty,
-                 _check_cow_exclusivity, _check_trie_structure)
+# Named registry: call-site hooks (``analysis/hooks.py``) run per-mutator
+# subsets of these by name; ``verify_state`` runs them all.
+CHECKS = {
+    "page_conservation": _check_page_conservation,
+    "refcount_honesty": _check_refcount_honesty,
+    "cow_exclusivity": _check_cow_exclusivity,
+    "trie_structure": _check_trie_structure,
+}
+
+_STATE_CHECKS = tuple(CHECKS.values())
+
+
+def verify_subset(alloc, cache, names,
+                  exempt: frozenset = frozenset(),
+                  extra: Optional[Dict[str, Any]] = None,
+                  events: Optional[List[dict]] = None,
+                  call_site: Optional[Dict[str, Any]] = None) -> None:
+    """Run the named subset of the state checks (``CHECKS`` keys); raise
+    :class:`InvariantViolation` on the first failure, tagged with
+    ``call_site`` when the caller is a call-tier hook.
+
+    ``exempt`` pages are excused from page-conservation bucket membership
+    (in transit between owners at the instrumented call's exit).
+    """
+    def fail(invariant: str, message: str) -> None:
+        raise InvariantViolation(invariant, message,
+                                 state=_state(alloc, cache, extra),
+                                 events=events, call_site=call_site)
+
+    for name in names:
+        check = CHECKS[name]
+        if name == "page_conservation":
+            check(fail, alloc, cache, exempt=exempt)
+        else:
+            check(fail, alloc, cache)
 
 
 def verify_state(alloc, cache=None,
@@ -324,17 +398,7 @@ def verify_state(alloc, cache=None,
     """
     if cache is None:
         cache = alloc.cache
-
-    def fail(invariant: str, message: str) -> None:
-        raise InvariantViolation(invariant, message,
-                                 state=_state(alloc, cache, extra),
-                                 events=events)
-
-    for check in _STATE_CHECKS:
-        if check is _check_refcount_honesty:
-            check(fail, alloc)
-        else:
-            check(fail, alloc, cache)
+    verify_subset(alloc, cache, CHECKS, extra=extra, events=events)
 
 
 # ------------------------------------------------------------ sanitizer ----
@@ -357,7 +421,20 @@ class KVSanitizer:
                              f"supported: {', '.join(SANITIZE_LEVELS)}")
         # rid -> (pages charged at admission, progress-override flag)
         self._budgets: Dict[int, Tuple[int, bool]] = {}
+        # rid -> promise snapshot taken at preemption (differential checker)
+        self._preempt_snaps: Dict[int, Dict[str, Any]] = {}
         self.n_checks = 0     # full-state validations performed (overhead/bench)
+        self.call_hooks = None
+        if self.level == "call":
+            from repro.analysis.hooks import install_call_hooks  # lazy: avoid cycle
+            self.call_hooks = install_call_hooks(
+                engine.alloc, engine.prefix_cache,
+                context_fn=lambda: (self._engine_state(), self._events_tail()))
+
+    @property
+    def n_call_checks(self) -> int:
+        """Invariant-subset checks run by call-site hooks (0 below ``call``)."""
+        return 0 if self.call_hooks is None else self.call_hooks.n_call_checks
 
     # --- scheduler hooks ---------------------------------------------------
     def note_admit(self, rid: int, pages: int, override: bool) -> None:
@@ -367,10 +444,80 @@ class KVSanitizer:
         COW capacity — exempt from the budget check)."""
         self._budgets[rid] = (pages, override)
 
-    def note_preempt(self, rid: int) -> None:
-        """``rid`` was evicted before completing its prefill; its next
-        admission re-budgets from scratch."""
-        self._budgets.pop(rid, None)
+    def note_preempt(self, req, committed: int) -> None:
+        """``req`` is being preempted with ``committed`` tokens of useful
+        work; its next admission re-budgets from scratch.
+
+        Called by the scheduler *after* ``cache_insert`` registered the
+        victim's committed pages but *before* ``alloc.free`` drops its
+        references — the exact instant ``resume_safe_pages`` prices.  We
+        snapshot the promise: the committed full-page chain, restricted
+        to pages some *other* live request keeps referenced once the
+        victim's own references are gone (those survive eviction; the
+        rest park reclaimable and may be stripped under pressure).
+        :meth:`note_resume` settles the promise at re-admission.
+        """
+        self._budgets.pop(req.rid, None)
+        cache = self.eng.prefix_cache
+        if cache is None:
+            return
+        alloc = self.eng.alloc
+        toks = (req.prompt + req.out_tokens)[:committed]
+        chain = cache.match(toks)
+        owned = set(alloc.owned(req.rid))
+        promised = [p for p in chain
+                    if alloc.ref_count(p) >= (2 if p in owned else 1)]
+        if promised:
+            self._preempt_snaps[req.rid] = {
+                "committed": committed,
+                "chain": list(chain),
+                "promised": promised,
+                # refs surviving after the victim's own free
+                "refs": {p: alloc.ref_count(p) - (1 if p in owned else 0)
+                         for p in promised},
+                "step": self.eng.metrics.n_steps,
+            }
+
+    def note_resume(self, req, mapped_pages: List[int]) -> None:
+        """A previously-preempted ``req`` was re-admitted and its prefix
+        re-matched ``mapped_pages``.  Settle the preemption promise:
+        every promised page still in the trie must have been remapped
+        (same page id, now owned by the request, still referenced).
+        Pages evicted since the preempt are excused — leaf-first reclaim
+        and whole-subtree blocked eviction keep chains gap-free, so a
+        still-cached promised page is always reachable by the matcher.
+        """
+        snap = self._preempt_snaps.pop(req.rid, None)
+        if snap is None:
+            return
+        cache = self.eng.prefix_cache
+        alloc = self.eng.alloc
+        mapped = set(mapped_pages)
+        owned = set(alloc.owned(req.rid))
+        for p in snap["promised"]:
+            if cache is None or not cache.is_cached(p):
+                continue          # evicted under pressure: promise lapsed
+            if p not in mapped:
+                self._fail(
+                    "preempt_resume",
+                    f"resume of request {req.rid} recomputed promised page "
+                    f"{p}: at preemption (step {snap['step']}, "
+                    f"{snap['committed']} committed tokens) it survived with "
+                    f"{snap['refs'][p]} external reference(s) and it is "
+                    f"still cached now, but the resume's prefix match "
+                    f"returned {sorted(mapped)} — resume_safe_pages promised "
+                    "a remap that prefix matching failed to deliver")
+            if p not in owned:
+                self._fail(
+                    "preempt_resume",
+                    f"resume of request {req.rid} matched promised page {p} "
+                    "but the request does not own it — the remap never "
+                    "acquired a reference")
+            if alloc.ref_count(p) < 1:
+                self._fail(
+                    "preempt_resume",
+                    f"promised page {p} remapped by request {req.rid} has "
+                    f"refcount {alloc.ref_count(p)}")
 
     # --- engine hooks ------------------------------------------------------
     def note_first_token(self, rid: int) -> None:
@@ -393,9 +540,11 @@ class KVSanitizer:
                        "not counted)")
 
     def after_step(self, finished: bool) -> None:
-        """End-of-step gate: full validation at ``step`` level always,
-        at ``finish`` level only when this step finished a request."""
-        if self.level == "step" or (self.level == "finish" and finished):
+        """End-of-step gate: full validation at ``step``/``call`` levels
+        always, at ``finish`` level only when this step finished a
+        request.  (``call`` additionally checks inside the step, at each
+        mutating allocator/cache call — see ``analysis/hooks.py``.)"""
+        if self.level in ("step", "call") or (self.level == "finish" and finished):
             self.check_now()
 
     # --- validation --------------------------------------------------------

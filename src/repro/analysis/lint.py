@@ -32,10 +32,34 @@ RPR005 metrics-unsurfaced
     A numeric ``EngineMetrics`` counter that ``summary()`` never reads
     is write-only telemetry: benchmarks and the regression gate can't
     see it, so regressions in what it counts ship silently.
+RPR006 jit-in-hot-path
+    ``jax.jit(...)`` constructed anywhere but a setup path (module
+    level, ``__init__``, ``_build_*``) creates a *fresh* compile cache
+    per call — every invocation pays a full XLA compile, the exact
+    recompile storm the dispatch sentinel (``analysis/dispatch.py``)
+    exists to catch at runtime.  Immediately-invoked ``jax.jit(f)(x)``
+    is flagged unconditionally.  Scoped to ``core/``.
+RPR007 host-sync-in-loop
+    ``.item()`` / ``np.asarray`` / ``jax.device_get`` on device values
+    inside a Python-level loop forces one host-device synchronization
+    per iteration, serializing the dispatch pipeline the step loop
+    relies on.  Hoist the transfer out of the loop and index the result.
+    Scoped to ``core/``.
+RPR008 pallas-no-contract
+    A kernel entry point that launches ``pallas_call`` without any
+    explicit argument-contract check (``raise`` on bad shapes/dtypes)
+    fails as an opaque Mosaic/XLA error deep in lowering.  Every Pallas
+    wrapper must validate its operand shapes/dtypes at entry.  Scoped to
+    ``kernels/``.
 
-Run as ``python -m repro.analysis.lint src/`` (non-zero exit on
-findings).  Stdlib-only on purpose: the CI lint job and pre-commit hooks
-run it without jax/numpy installed.
+Run as ``python -m repro.analysis.lint src/ tests/ benchmarks/``
+(non-zero exit on findings).  ``--select``/``--ignore`` take
+comma-separated codes or names; ``--format github`` emits workflow
+annotations for the CI lint job.  A finding is suppressed by a
+``# rpr: noqa`` comment on its line (all rules) or
+``# rpr: noqa[RPR002,RPR004]`` (those rules only).  Stdlib-only on
+purpose: the CI lint job and pre-commit hooks run it without jax/numpy
+installed.
 
 Adding a rule: subclass ``Rule``, emit ``Finding``s from ``check``, add
 an instance to ``RULES``, and seed ``tests/test_lint.py`` with a fixture
@@ -45,9 +69,10 @@ from __future__ import annotations
 
 import argparse
 import ast
+import re
 import sys
 from pathlib import Path
-from typing import Iterator, List, NamedTuple, Optional, Sequence
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, Set
 
 
 class Finding(NamedTuple):
@@ -93,9 +118,12 @@ class Rule:
     name = ""
     # only lint files whose posix path contains this substring ("" = all)
     scope = ""
+    # skip files whose posix path contains this substring ("" = none)
+    exclude = ""
 
     def applies(self, path: str) -> bool:
-        return self.scope in Path(path).as_posix()
+        p = Path(path).as_posix()
+        return self.scope in p and not (self.exclude and self.exclude in p)
 
     def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
         raise NotImplementedError
@@ -146,6 +174,7 @@ class MutableDefault(Rule):
 class BareAssert(Rule):
     code = "RPR002"
     name = "bare-assert"
+    exclude = "tests/"      # pytest asserts are the idiom there
 
     def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
         for node in ast.walk(tree):
@@ -277,9 +306,149 @@ class MetricsSurfaced(Rule):
                     "the regression gate")
 
 
+def _is_jit(node: ast.expr) -> bool:
+    """``jax.jit`` (dotted, rooted at jax) or a bare ``jit`` name."""
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit" and _call_root(node) == "jax"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+_JIT_SETUP_NAMES = ("__init__",)     # plus any function named _build*
+
+
+class JitInHotPath(Rule):
+    code = "RPR006"
+    name = "jit-in-hot-path"
+    scope = "repro/core"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        findings: List[Finding] = []
+        rule = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+                self.skip: Set[int] = set()
+
+            def _func(self, node):
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+
+            visit_FunctionDef = _func
+            visit_AsyncFunctionDef = _func
+
+            def visit_Call(self, node):
+                if isinstance(node.func, ast.Call) and _is_jit(node.func.func):
+                    findings.append(Finding(
+                        "", node.lineno, rule.code,
+                        "jax.jit(f)(...) constructs a jitted wrapper and "
+                        "invokes it in one expression: the compile cache is "
+                        "thrown away per call, so every invocation pays a "
+                        "full XLA compile"))
+                    self.skip.add(id(node.func))
+                if _is_jit(node.func) and id(node) not in self.skip:
+                    in_setup = any(
+                        name in _JIT_SETUP_NAMES or name.startswith("_build")
+                        for name in self.stack)
+                    if self.stack and not in_setup:
+                        findings.append(Finding(
+                            "", node.lineno, rule.code,
+                            f"jax.jit constructed inside "
+                            f"{self.stack[-1]}(): a fresh compile cache per "
+                            "call is a recompile storm; hoist to module "
+                            "level, __init__, or a _build_* method"))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        yield from findings
+
+
+# host-sync callables flagged inside loops: attr calls by name, dotted
+# calls by (root, attr)
+_SYNC_ATTRS = frozenset({"item"})
+_SYNC_CALLS = frozenset({("np", "asarray"), ("np", "array"),
+                         ("np", "copy"), ("jax", "device_get"),
+                         ("numpy", "asarray"), ("numpy", "array")})
+
+
+class HostSyncInLoop(Rule):
+    code = "RPR007"
+    name = "host-sync-in-loop"
+    scope = "repro/core"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        findings: List[Finding] = []
+        rule = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.loop_depth = 0
+
+            def _loop(self, node):
+                self.loop_depth += 1
+                self.generic_visit(node)
+                self.loop_depth -= 1
+
+            visit_For = _loop
+            visit_While = _loop
+
+            def _func(self, node):
+                saved, self.loop_depth = self.loop_depth, 0
+                self.generic_visit(node)
+                self.loop_depth = saved
+
+            visit_FunctionDef = _func
+            visit_AsyncFunctionDef = _func
+
+            def visit_Call(self, node):
+                if self.loop_depth:
+                    f = node.func
+                    sync = None
+                    if isinstance(f, ast.Attribute):
+                        if f.attr in _SYNC_ATTRS and not node.args:
+                            sync = f".{f.attr}()"
+                        elif (_call_root(f), f.attr) in _SYNC_CALLS:
+                            sync = ast.unparse(f) + "()"
+                    if sync is not None:
+                        findings.append(Finding(
+                            "", node.lineno, rule.code,
+                            f"{sync} inside a Python-level loop forces one "
+                            "host-device sync per iteration, serializing "
+                            "the dispatch pipeline; hoist the transfer out "
+                            "of the loop and index the host copy"))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        yield from findings
+
+
+class PallasContract(Rule):
+    code = "RPR008"
+    name = "pallas-no-contract"
+    scope = "repro/kernels"
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            launches = any(
+                isinstance(sub, ast.Call) and _callee_name(sub) == "pallas_call"
+                for sub in ast.walk(node))
+            raises = any(isinstance(sub, ast.Raise) for sub in ast.walk(node))
+            if launches and not raises:
+                yield Finding(
+                    "", node.lineno, self.code,
+                    f"{node.name}() launches pallas_call with no explicit "
+                    "argument-contract check: a bad shape/dtype dies as an "
+                    "opaque Mosaic lowering error; validate operands and "
+                    "raise at entry")
+
+
 RULES: Sequence[Rule] = (MutableDefault(), BareAssert(),
                          ServeConfigValidated(), JnpInLoop(),
-                         MetricsSurfaced())
+                         MetricsSurfaced(), JitInHotPath(),
+                         HostSyncInLoop(), PallasContract())
 
 
 def _iter_files(paths: Sequence[str]) -> Iterator[Path]:
@@ -291,26 +460,61 @@ def _iter_files(paths: Sequence[str]) -> Iterator[Path]:
             yield path
 
 
+# "# rpr: noqa" (all rules) or "# rpr: noqa[RPR002,RPR004]" (those only)
+_NOQA_RE = re.compile(r"#\s*rpr:\s*noqa(?:\[([A-Za-z0-9_,\s-]+)\])?")
+
+
+def _suppressions(source: str) -> Dict[int, Optional[Set[str]]]:
+    """line number -> suppressed codes (None = every rule)."""
+    sup: Dict[int, Optional[Set[str]]] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _NOQA_RE.search(line)
+        if m:
+            codes = m.group(1)
+            sup[i] = (None if codes is None else
+                      {c.strip().upper() for c in codes.split(",") if c.strip()})
+    return sup
+
+
+def _suppressed(f: Finding, sup: Dict[int, Optional[Set[str]]]) -> bool:
+    codes = sup.get(f.line, ())
+    return codes is None or f.code in codes
+
+
 def lint_paths(paths: Sequence[str],
-               select: Optional[Sequence[str]] = None) -> List[Finding]:
+               select: Optional[Sequence[str]] = None,
+               ignore: Optional[Sequence[str]] = None) -> List[Finding]:
     rules = [r for r in RULES if select is None or r.code in select
              or r.name in select]
+    if ignore:
+        rules = [r for r in rules
+                 if r.code not in ignore and r.name not in ignore]
     findings: List[Finding] = []
     for file in _iter_files(paths):
         rel = str(file)
         try:
-            tree = ast.parse(file.read_text(), filename=rel)
+            source = file.read_text()
+            tree = ast.parse(source, filename=rel)
         except SyntaxError as e:
             findings.append(Finding(rel, e.lineno or 0, "RPR000",
                                     f"syntax error: {e.msg}"))
             continue
+        sup = _suppressions(source)
         for rule in rules:
             if not rule.applies(rel):
                 continue
             findings.extend(f._replace(path=rel)
-                            for f in rule.check(tree, rel))
+                            for f in rule.check(tree, rel)
+                            if not _suppressed(f, sup))
     findings.sort(key=lambda f: (f.path, f.line, f.code))
     return findings
+
+
+def _render_github(f: Finding) -> str:
+    """GitHub Actions workflow annotation (shows inline on the PR diff)."""
+    message = f.message.replace("%", "%25").replace("\n", "%0A")
+    return (f"::error file={f.path},line={f.line},"
+            f"title={f.code}::{message}")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -321,11 +525,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--select", default=None,
                     help="comma-separated rule codes/names to run "
                          "(default: all)")
+    ap.add_argument("--ignore", default=None,
+                    help="comma-separated rule codes/names to skip")
+    ap.add_argument("--format", default="text", choices=("text", "github"),
+                    help="text: path:line: CODE message; github: workflow "
+                         "annotations for the CI lint job")
     args = ap.parse_args(argv)
     select = args.select.split(",") if args.select else None
-    findings = lint_paths(args.paths, select)
+    ignore = args.ignore.split(",") if args.ignore else None
+    findings = lint_paths(args.paths, select, ignore)
     for f in findings:
-        print(f.render())
+        print(_render_github(f) if args.format == "github" else f.render())
     n_files = sum(1 for _ in _iter_files(args.paths))
     print(f"{len(findings)} finding(s) in {n_files} file(s) "
           f"[{', '.join(r.code for r in RULES)}]")

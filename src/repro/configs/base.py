@@ -185,10 +185,20 @@ class ServeConfig:
     # off:    never check (zero overhead; production default)
     # finish: full cross-module validation after any step finishing a request
     # step:   validate after every engine step (CI runs tier-1 under this)
+    # call:   step, plus call-site hooks on every mutating allocator/cache
+    #         entry point (violations attributed to the exact call)
     # Defaults from $REPRO_SANITIZE so CI flips whole suites via the
     # environment without touching individual tests.
     sanitize_level: str = field(
         default_factory=lambda: os.environ.get("REPRO_SANITIZE", "off"))
+    # --- jit-dispatch sentinel (analysis/dispatch.py) ---
+    # Counts XLA compiles per jitted step callable, raises on recompile
+    # storms in the step loop, and lets harnesses assert a zero
+    # post-warmup recompile budget.  Defaults from $REPRO_DISPATCH_SENTINEL
+    # so CI arms whole suites via the environment.
+    dispatch_sentinel: bool = field(
+        default_factory=lambda: os.environ.get(
+            "REPRO_DISPATCH_SENTINEL", "") not in ("", "0", "false", "off"))
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
@@ -242,10 +252,10 @@ class ServeConfig:
         if self.decode_reserve < 0:
             raise ValueError(
                 f"decode_reserve must be >= 0, got {self.decode_reserve}")
-        if not isinstance(self.enable_prefix_cache, bool):
-            raise ValueError(
-                f"enable_prefix_cache must be a bool, got "
-                f"{self.enable_prefix_cache!r}")
+        for knob in ("enable_prefix_cache", "dispatch_sentinel"):
+            value = getattr(self, knob)
+            if not isinstance(value, bool):
+                raise ValueError(f"{knob} must be a bool, got {value!r}")
         from repro.analysis.invariants import SANITIZE_LEVELS
         if self.sanitize_level not in SANITIZE_LEVELS:
             raise ValueError(

@@ -73,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.dispatch import DispatchSentinel
 from repro.analysis.invariants import KVSanitizer
 from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
@@ -191,6 +192,10 @@ class Engine:
         # None at the default "off" level so hot paths pay one None test
         self.sanitizer = (KVSanitizer(self)
                           if serve.sanitize_level != "off" else None)
+        # jit-dispatch sentinel (analysis/dispatch.py): counts compiles per
+        # step callable and raises on recompile storms / post-warmup budget
+        self.dispatch = (DispatchSentinel()
+                         if serve.dispatch_sentinel else None)
         self._build_jits()
 
     @property
@@ -222,10 +227,25 @@ class Engine:
         def mixed_fn(params, mb, kpg, vpg):
             return T.mixed(params, cfg, mb, kpg, vpg)
 
-        self._prefill = jax.jit(prefill_full)
-        self._commit = jax.jit(commit, donate_argnums=(0, 1))
-        self._decode = jax.jit(decode_fn, donate_argnums=(2, 3))
-        self._mixed = jax.jit(mixed_fn, donate_argnums=(2, 3))
+        # prefill/commit batches legitimately vary with workload shape, so
+        # the sentinel only counts them; decode/mixed/samplers are the
+        # steady-state step loop where any compile density is a bug.
+        self._prefill = self._sentineled("prefill", jax.jit(prefill_full),
+                                         storm_guard=False)
+        self._commit = self._sentineled(
+            "commit", jax.jit(commit, donate_argnums=(0, 1)),
+            storm_guard=False)
+        self._decode = self._sentineled(
+            "decode", jax.jit(decode_fn, donate_argnums=(2, 3)))
+        self._mixed = self._sentineled(
+            "mixed", jax.jit(mixed_fn, donate_argnums=(2, 3)))
+        self._greedy = self._sentineled("sample_greedy", greedy_tokens)
+        self._sample = self._sentineled("sample", sample_tokens)
+
+    def _sentineled(self, name, fn, storm_guard: bool = True):
+        if self.dispatch is None:
+            return fn
+        return self.dispatch.wrap(name, fn, storm_guard=storm_guard)
 
     # ------------------------------------------------------------ public ---
     def submit(self, req: Request):
@@ -442,6 +462,8 @@ class Engine:
         if n:
             self.metrics.req(req.rid).n_cached_tokens += n
             self.metrics.n_cached_tokens += n
+        if self.sanitizer is not None:   # settle any preempt/resume promise
+            self.sanitizer.note_resume(req, pages)
         return n
 
     def cache_insert(self, req: Request, n_committed: int,
@@ -911,7 +933,7 @@ class Engine:
         being sampled — so results don't depend on batch composition,
         engine mode, or preemption history."""
         if all(r is None or r.sampling.temperature <= 0.0 for r in reqs):
-            return np.asarray(greedy_tokens(logits))   # all-greedy fast path
+            return np.asarray(self._greedy(logits))    # all-greedy fast path
         B = logits.shape[0]
         temp = np.zeros((B,), np.float32)
         top_k = np.zeros((B,), np.int32)
@@ -929,6 +951,6 @@ class Engine:
             seed[i] = sp.seed
             rid[i] = r.rid
             pos[i] = len(r.out_tokens)
-        return np.asarray(sample_tokens(
+        return np.asarray(self._sample(
             logits, jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
             jnp.asarray(seed), jnp.asarray(rid), jnp.asarray(pos)))

@@ -288,8 +288,11 @@ class Scheduler:
         committed = victim.seq_len if kind == "slot" else victim.pos
         self.eng.cache_insert(r, committed, final=True)
         self.eng.unregister_inflight(r.rid)
-        if self.eng.sanitizer is not None:   # re-admission re-budgets
-            self.eng.sanitizer.note_preempt(r.rid)
+        if self.eng.sanitizer is not None:
+            # re-admission re-budgets; the sanitizer also snapshots the
+            # resume_safe_pages promise here (before free drops the
+            # victim's refs) and settles it when the resume re-maps
+            self.eng.sanitizer.note_preempt(r, committed)
         freed = self.alloc.free(r.rid)
         self.requeue(r)
         self.metrics.req(r.rid).n_preempted += 1

@@ -105,7 +105,25 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ):
+    # argument contract (static shapes/dtypes: free once jitted)
+    if q.ndim != 5:
+        raise ValueError(f"q must be [B, KV_p, T, G, d], got shape {q.shape}")
     B, KV_p, T, G, d = q.shape
+    if k.shape != v.shape or k.ndim != 4:
+        raise ValueError(
+            f"k/v must share shape [B, KV_p, Tk, d], got {k.shape} vs "
+            f"{v.shape}")
+    if k.shape[0] != B or k.shape[1] != KV_p or k.shape[3] != d:
+        raise ValueError(
+            f"k shape {k.shape} disagrees with q's (B, KV_p, ..., d) = "
+            f"{(B, KV_p, d)}")
+    if q.dtype != k.dtype or k.dtype != v.dtype:
+        raise ValueError(
+            f"q/k/v dtypes must match, got {q.dtype}/{k.dtype}/{v.dtype}")
+    if kv_lens.shape != (B,) or not jnp.issubdtype(kv_lens.dtype, jnp.integer):
+        raise ValueError(
+            f"kv_lens must be integer [B={B}], got {kv_lens.shape} "
+            f"{kv_lens.dtype}")
     Tk = k.shape[2]
     bq = min(block_q, T)
     bk = min(block_k, Tk)

@@ -119,8 +119,36 @@ def paged_attention(
     interpret: bool = False,
 ):
     """Returns o [B, KV_p, C, G, d]."""
+    # argument contract — shape/dtype mistakes must die here with a
+    # message, not as an opaque Mosaic lowering error (all checks are on
+    # static shapes/dtypes: zero cost once jitted)
+    if q.ndim != 5:
+        raise ValueError(f"q must be [B, KV_p, C, G, d], got shape {q.shape}")
     B, KV_p, C, G, d = q.shape
+    if k_pages.ndim != 4 or k_pages.shape != v_pages.shape:
+        raise ValueError(
+            f"k_pages/v_pages must share shape [N, ps, KV_p, d], got "
+            f"{k_pages.shape} vs {v_pages.shape}")
     N, ps, _, _ = k_pages.shape
+    if k_pages.shape[2:] != (KV_p, d):
+        raise ValueError(
+            f"k_pages trailing dims {k_pages.shape[2:]} disagree with q's "
+            f"(KV_p, d) = {(KV_p, d)}")
+    if k_pages.dtype != v_pages.dtype or q.dtype != k_pages.dtype:
+        raise ValueError(
+            f"q/k_pages/v_pages dtypes must match, got {q.dtype}/"
+            f"{k_pages.dtype}/{v_pages.dtype}")
+    if block_table.ndim != 2 or block_table.shape[0] != B:
+        raise ValueError(
+            f"block_table must be [B={B}, Pmax], got {block_table.shape}")
+    for name, arr in (("block_table", block_table), ("kv_lens", kv_lens),
+                      ("q_pos", q_pos)):
+        if not jnp.issubdtype(arr.dtype, jnp.integer):
+            raise ValueError(f"{name} must be integer-typed, got {arr.dtype}")
+    if kv_lens.shape != (B,) or q_pos.shape != (B,):
+        raise ValueError(
+            f"kv_lens/q_pos must be [B={B}], got {kv_lens.shape} / "
+            f"{q_pos.shape}")
     Pmax = block_table.shape[1]
 
     grid = (B, KV_p, Pmax)

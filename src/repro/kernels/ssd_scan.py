@@ -65,7 +65,17 @@ def ssd_chunk_scan(xdt, la, Bc, Cc, *, chunk: int = 64,
                    interpret: bool = False):
     """xdt [B,H,T,P]; la [B,H,T]; Bc/Cc [B,T,N] -> (y [B,H,T,P],
     h_final [B,H,P,N]). T must be a multiple of chunk."""
+    # argument contract (static shapes: free once jitted)
+    if xdt.ndim != 4:
+        raise ValueError(f"xdt must be [B, H, T, P], got shape {xdt.shape}")
     B, H, T, P = xdt.shape
+    if la.shape != (B, H, T):
+        raise ValueError(
+            f"la must be [B, H, T] = {(B, H, T)}, got {la.shape}")
+    if Bc.shape != Cc.shape or Bc.ndim != 3 or Bc.shape[:2] != (B, T):
+        raise ValueError(
+            f"Bc/Cc must share shape [B={B}, T={T}, N], got {Bc.shape} vs "
+            f"{Cc.shape}")
     N = Bc.shape[-1]
     if T % chunk:
         raise ValueError(f"T={T} must be a multiple of chunk={chunk}")

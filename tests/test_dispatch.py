@@ -1,0 +1,167 @@
+"""Jit-dispatch sentinel (analysis/dispatch.py): compile counting proven
+against real ``jax.jit`` cache behaviour, the storm guard proven by an
+injected recompile storm, and the engine wiring proven compiled-once —
+a full warmed-up workload re-run triggers zero post-warmup recompiles.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.analysis.dispatch import (STORM_THRESHOLD, STORM_WINDOW,
+                                     DispatchSentinel)
+from repro.analysis.invariants import InvariantViolation
+from repro.configs import ServeConfig
+from repro.core.engine import Engine, Request, SamplingParams
+
+
+# ------------------------------------------------------- unit: counting ----
+def test_counts_real_jit_compiles():
+    sent = DispatchSentinel()
+    fn = sent.wrap("f", jax.jit(lambda x: x * 2))
+    fn(jnp.ones((4,)))
+    fn(jnp.ones((4,)))                    # cache hit
+    fn(jnp.ones((4,)))
+    assert sent.stats["f"].n_compiles == 1
+    fn(jnp.ones((8,)))                    # new shape -> new compile
+    assert sent.stats["f"].n_compiles == 2
+    assert sent.stats["f"].n_calls == 4
+
+
+def test_warm_budget_with_real_jit():
+    sent = DispatchSentinel()
+    fn = sent.wrap("f", jax.jit(lambda x: x + 1))
+    fn(jnp.ones((4,)))
+    fn(jnp.ones((8,)))
+    sent.mark_warm()
+    fn(jnp.ones((4,)))                    # warm dispatch, no compile
+    sent.check(budget=0)                  # compiled-once holds
+    fn(jnp.ones((16,)))                   # post-warmup recompile
+    assert sent.post_warm_compiles() == {"f": 1}
+    with pytest.raises(InvariantViolation) as e:
+        sent.check(budget=0)
+    assert e.value.invariant == "jit_dispatch"
+    assert "dispatch" in e.value.state
+    sent.check(budget=1)                  # explicit budget absorbs it
+
+
+def test_fallback_signature_probe_for_plain_callables():
+    # no _cache_size -> duck-typed signatures stand in for the jit cache
+    sent = DispatchSentinel()
+    fn = sent.wrap("plain", lambda x, flag=False: x)
+    fn(np.ones((4,)))
+    fn(np.ones((4,)))                     # same signature: no compile
+    fn(np.ones((4,), dtype=np.int32))     # dtype change counts
+    fn(np.ones((4,)), flag=True)          # kwarg *value* change counts
+    assert sent.stats["plain"].n_compiles == 3
+    assert sent.stats["plain"].n_calls == 4
+
+
+# --------------------------------------------------- unit: storm guard ----
+def _storm(fn, n):
+    for i in range(n):
+        fn(jnp.ones((i + 1,)))            # every call a fresh shape
+
+
+def test_storm_guard_catches_injected_recompile_storm():
+    sent = DispatchSentinel()
+    fn = sent.wrap("decode", jax.jit(lambda x: x.sum()), storm_guard=True)
+    with pytest.raises(InvariantViolation) as e:
+        _storm(fn, STORM_WINDOW + 1)
+    assert e.value.invariant == "jit_dispatch"
+    assert "recompile storm" in str(e.value)
+    # the guard waited for a full window before judging density
+    assert sent.stats["decode"].n_calls >= STORM_WINDOW
+    assert sent.stats["decode"].n_compiles >= STORM_THRESHOLD
+
+
+def test_storm_guard_off_only_counts():
+    # prefill/commit legitimately see per-workload shape diversity
+    sent = DispatchSentinel()
+    fn = sent.wrap("prefill", jax.jit(lambda x: x.sum()), storm_guard=False)
+    _storm(fn, STORM_WINDOW + 8)          # same storm, no raise
+    assert sent.stats["prefill"].n_compiles == STORM_WINDOW + 8
+
+
+def test_sparse_recompiles_below_threshold_pass():
+    sent = DispatchSentinel(storm_window=8, storm_threshold=4)
+    fn = sent.wrap("decode", jax.jit(lambda x: x * 1.0), storm_guard=True)
+    shapes = [4, 8]                       # two shapes, then all cache hits
+    for i in range(32):
+        fn(jnp.ones((shapes[i % 2],)))    # density 2/8 < 4: healthy
+
+
+# -------------------------------------------------------- engine wiring ----
+ARCH = "qwen3-0.6b"
+
+SMALL = ServeConfig(max_batch=4, page_size=4, n_pages=20,
+                    max_pages_per_seq=12, prefill_chunk=4, n_streams=2,
+                    enable_prefix_cache=True, sanitize_level="off",
+                    dispatch_sentinel=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    shared = list(rng.randint(2, model.cfg.vocab_size, size=8))
+    prompts = [shared + list(rng.randint(2, model.cfg.vocab_size, size=4))
+               for _ in range(4)]
+    return model, params, prompts
+
+
+def _requests(prompts, base_rid=0, n_new=8):
+    return [Request(rid=base_rid + i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=n_new))
+            for i, p in enumerate(prompts)]
+
+
+@pytest.mark.parametrize("mode", ["sequential", "splitwiser", "splitwiser_mps"])
+def test_engine_hot_path_is_compiled_once(setup, mode):
+    """Warmed-up engine, then an identical workload: zero post-warmup
+    recompiles on every step callable — the acceptance criterion for the
+    sentinel wiring.  Warmup is two runs, not one: the second run hits
+    the prefix cache the first populated, which legitimately changes
+    batch composition (shorter prefills), so steady-state shapes only
+    stabilise from the second run on."""
+    model, params, prompts = setup
+    eng = Engine(model, params, dataclasses.replace(SMALL, mode=mode))
+    eng.run(_requests(prompts), max_steps=4000)
+    eng.run(_requests(prompts, base_rid=50), max_steps=4000)
+    assert eng.dispatch is not None
+    assert eng.dispatch.total_compiles > 0          # probe saw the warmup
+    eng.dispatch.mark_warm()
+    eng.run(_requests(prompts, base_rid=100), max_steps=4000)
+    eng.dispatch.check(budget=0)                    # raises on any recompile
+    assert all(n == 0 for n in eng.dispatch.post_warm_compiles().values())
+
+
+def test_engine_report_names_step_callables(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, dataclasses.replace(SMALL, mode="splitwiser"))
+    eng.run(_requests(prompts), max_steps=4000)
+    report = eng.dispatch.report()
+    assert "mixed" in report or "decode" in report
+    for row in report.values():
+        assert set(row) == {"calls", "compiles", "post_warm"}
+
+
+def test_sentinel_off_by_default(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params,
+                 dataclasses.replace(SMALL, dispatch_sentinel=False))
+    assert eng.dispatch is None
+    eng.run(_requests(prompts, n_new=4), max_steps=4000)   # still runs clean
+
+
+def test_env_default(monkeypatch):
+    monkeypatch.delenv("REPRO_DISPATCH_SENTINEL", raising=False)
+    assert ServeConfig().dispatch_sentinel is False
+    monkeypatch.setenv("REPRO_DISPATCH_SENTINEL", "1")
+    assert ServeConfig().dispatch_sentinel is True
+    monkeypatch.setenv("REPRO_DISPATCH_SENTINEL", "0")
+    assert ServeConfig().dispatch_sentinel is False

@@ -53,6 +53,38 @@ def runtime_path(xs):
     for x in xs:
         out.append(jnp.asarray(x))        # RPR004 (scoped to core/)
     return out
+
+
+def hot_step(params, tokens):
+    import jax
+    fn = jax.jit(lambda p, t: p + t)      # RPR006 (fresh cache per call)
+    total = 0.0
+    for t in tokens:
+        total += t.item()                 # RPR007 (sync per iteration)
+    return fn(params, tokens), total
+
+
+def hot_step_inline(params, tokens):
+    import jax
+    return jax.jit(lambda p: p)(params)   # RPR006 (immediately invoked)
+'''
+
+KERNEL_FIXTURE = '''\
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch_unchecked(x):                  # RPR008 (no contract raise)
+    return pl.pallas_call(_kernel, out_shape=x)(x)
+
+
+def launch_checked(x):
+    if x.ndim != 2:
+        raise ValueError(f"x must be 2D, got {x.shape}")
+    return pl.pallas_call(_kernel, out_shape=x)(x)
 '''
 
 
@@ -65,13 +97,28 @@ def _write_fixture(tmp_path):
     return f
 
 
+def _write_kernel_fixture(tmp_path):
+    d = tmp_path / "repro" / "kernels"
+    d.mkdir(parents=True)
+    f = d / "seeded_kernel.py"
+    f.write_text(KERNEL_FIXTURE)
+    return f
+
+
 def test_every_rule_fires_on_seeded_fixture(tmp_path):
     f = _write_fixture(tmp_path)
-    findings = lint.lint_paths([str(f)])
+    kf = _write_kernel_fixture(tmp_path)
+    findings = lint.lint_paths([str(f), str(kf)])
     assert {x.code for x in findings} == {
-        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005"}
+        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005",
+        "RPR006", "RPR007", "RPR008"}
     # both mutable-default shapes (arg literal + dataclass call) are hit
     assert sum(1 for x in findings if x.code == "RPR001") == 2
+    # both jit-in-hot-path shapes (in-function + immediately-invoked)
+    assert sum(1 for x in findings if x.code == "RPR006") == 2
+    # the contract-checked launcher is NOT flagged
+    rpr008 = [x for x in findings if x.code == "RPR008"]
+    assert len(rpr008) == 1 and "launch_unchecked" in rpr008[0].message
 
 
 def test_select_filters_rules(tmp_path):
@@ -101,6 +148,44 @@ def test_repo_src_is_clean():
     assert lint.lint_paths([str(SRC)]) == []
 
 
+def test_repo_tests_and_benchmarks_are_clean():
+    # CI lints these trees too (bare-assert excluded under tests/)
+    root = SRC.parent
+    assert lint.lint_paths([str(root / "tests"),
+                            str(root / "benchmarks")]) == []
+
+
+def test_bare_assert_excluded_in_tests(tmp_path):
+    d = tmp_path / "tests"
+    d.mkdir()
+    f = d / "test_seeded.py"
+    f.write_text("def test_x():\n    assert 1 + 1 == 2\n")
+    assert lint.lint_paths([str(f)]) == []
+
+
+def test_noqa_suppression(tmp_path):
+    f = tmp_path / "seeded.py"
+    f.write_text(
+        "def a(xs):\n"
+        "    assert xs  # rpr: noqa\n"              # blanket
+        "def b(xs):\n"
+        "    assert xs  # rpr: noqa[RPR002]\n"      # targeted, matches
+        "def c(xs):\n"
+        "    assert xs  # rpr: noqa[RPR001]\n"      # targeted, no match
+        "def d(xs):\n"
+        "    assert xs\n")                          # unsuppressed
+    findings = lint.lint_paths([str(f)])
+    assert [x.line for x in findings] == [6, 8]
+
+
+def test_ignore_filters_rules(tmp_path):
+    f = _write_fixture(tmp_path)
+    findings = lint.lint_paths([str(f)], ignore=["RPR002", "jnp-in-loop"])
+    codes = {x.code for x in findings}
+    assert "RPR002" not in codes and "RPR004" not in codes
+    assert "RPR001" in codes
+
+
 def test_cli_exit_codes(tmp_path):
     f = _write_fixture(tmp_path)
     env_src = str(SRC)
@@ -113,3 +198,24 @@ def test_cli_exit_codes(tmp_path):
         capture_output=True, text=True, env={"PYTHONPATH": env_src})
     assert seeded.returncode == 1
     assert "RPR001" in seeded.stdout
+
+
+def test_cli_github_format(tmp_path):
+    f = _write_fixture(tmp_path)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(f),
+         "--format", "github"],
+        capture_output=True, text=True, env={"PYTHONPATH": str(SRC)})
+    assert out.returncode == 1
+    assert "::error file=" in out.stdout
+    assert "title=RPR001" in out.stdout
+
+
+def test_cli_ignore_flag(tmp_path):
+    f = _write_fixture(tmp_path)
+    codes = ",".join(r.code for r in lint.RULES)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(f),
+         "--ignore", codes],
+        capture_output=True, text=True, env={"PYTHONPATH": str(SRC)})
+    assert out.returncode == 0, out.stdout + out.stderr

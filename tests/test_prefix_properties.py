@@ -26,6 +26,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis.hooks import install_call_hooks
 from repro.analysis.invariants import verify_state
 from repro.core.kv_cache import OutOfPages, PageAllocator
 from repro.core.policies import make_eviction
@@ -67,6 +68,10 @@ def test_cache_lifecycle_interleavings_preserve_invariants(data):
     policy = make_eviction(data.draw(st.sampled_from(["lru", "fifo", "cost"])))
     cache = PrefixCache(PS, policy=policy)
     alloc = PageAllocator(n_pages, PS, cache=cache)
+    # sanitize_level="call" equivalent: every mutating alloc/cache call in
+    # the random interleaving below is also invariant-checked at its own
+    # exit, with the violation attributed to the exact call site
+    hooks = install_call_hooks(alloc, cache)
     # a tiny template pool makes prefix collisions (shared chains) common
     templates = [
         [data.draw(st.integers(0, 3)) for _ in range(PS * data.draw(st.integers(1, 4)))]
@@ -145,6 +150,7 @@ def test_cache_lifecycle_interleavings_preserve_invariants(data):
         alloc.free(rid)
     _check_invariants(alloc, cache)
     assert alloc.n_free == alloc.n_pages - 1
+    assert hooks.n_call_checks > 0           # the call tier actually ran
 
 
 @settings(max_examples=40, deadline=None)
@@ -158,6 +164,7 @@ def test_reclaim_under_pressure_keeps_chains_intact(data):
     cache = PrefixCache(PS, policy=data.draw(
         st.sampled_from(["lru", "fifo", "cost"])))
     alloc = PageAllocator(n_pages, PS, cache=cache)
+    install_call_hooks(alloc, cache)         # call-tier checks ride along
     templates = []
     rid = 0
     # fill the cache with a few chains, freeing each owner

@@ -185,6 +185,104 @@ def test_underbudgeted_admission_detected(setup, monkeypatch):
     assert e.value.invariant == "scheduler_budget"
 
 
+def test_pressure_run_exercises_preempt_promises(setup):
+    """The oversubscribed pool actually preempts, so the differential
+    preempt/resume checker ran on real scheduler paths — and stayed
+    silent."""
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL)
+    m = eng.run(_requests(prompts), max_steps=4000)
+    assert m.summary()["n_done"] == len(prompts)
+    assert m.n_preempt_events > 0           # the checker had work to do
+    assert not eng.sanitizer._preempt_snaps  # every promise was settled
+
+
+def _promised_chain(eng):
+    """Build the differential checker's precondition by hand: rid 1 owns
+    a cached 2-page chain that rid 2 also references, so at preemption
+    both pages are promised to survive rid 1's free."""
+    toks = list(range(100, 100 + 2 * PS))
+    pages = eng.alloc.alloc(1, 2)
+    eng.prefix_cache.insert(toks, pages)
+    eng.alloc.share(2, pages)               # the external reference
+    req = Request(rid=1, prompt=list(toks),
+                  sampling=SamplingParams(max_new_tokens=4))
+    return req, toks, pages
+
+
+def test_resume_recompute_of_promised_page_detected(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL)
+    req, toks, pages = _promised_chain(eng)
+    eng.sanitizer.note_preempt(req, len(toks))
+    eng.alloc.free(1)                       # the scheduler's eviction
+    # inject: the resume recomputes instead of remapping — the promised
+    # pages are still cached, so the empty match is a regression
+    with pytest.raises(InvariantViolation) as e:
+        eng.sanitizer.note_resume(req, [])
+    assert e.value.invariant == "preempt_resume"
+    assert "recomputed promised page" in str(e.value)
+
+
+def test_resume_without_ownership_detected(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL)
+    req, toks, pages = _promised_chain(eng)
+    eng.sanitizer.note_preempt(req, len(toks))
+    eng.alloc.free(1)
+    # inject: resume claims the match but never re-acquired references
+    with pytest.raises(InvariantViolation) as e:
+        eng.sanitizer.note_resume(req, list(pages))
+    assert e.value.invariant == "preempt_resume"
+    assert "does not own" in str(e.value)
+
+
+def test_resume_remap_settles_promise(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL)
+    req, toks, pages = _promised_chain(eng)
+    eng.sanitizer.note_preempt(req, len(toks))
+    eng.alloc.free(1)
+    eng.alloc.share(1, pages)               # the honest resume remap
+    eng.sanitizer.note_resume(req, list(pages))
+    assert 1 not in eng.sanitizer._preempt_snaps
+
+
+def test_promise_lapses_on_eviction(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL)
+    req, toks, pages = _promised_chain(eng)
+    eng.sanitizer.note_preempt(req, len(toks))
+    eng.alloc.free(1)
+    eng.alloc.free(2)                       # chain parks reclaimable...
+    while eng.prefix_cache.pop_reclaimable() is not None:
+        pass                                # ...and pressure strips it
+    assert not any(eng.prefix_cache.is_cached(p) for p in pages)
+    eng.sanitizer.note_resume(req, [])      # recompute is legitimate now
+
+
+def test_lossy_resume_match_detected_end_to_end(setup, monkeypatch):
+    """Integration proof: regress the resume-side prefix match (the
+    engine recomputes what resume_safe_pages promised to remap) and the
+    differential checker must catch it on a real preempt/resume cycle."""
+    model, params, prompts = setup
+    orig = Engine._map_cached
+
+    def lossy(self, req):
+        if (self.sanitizer is not None
+                and req.rid in self.sanitizer._preempt_snaps):
+            # resumes recompute from scratch; first admissions unaffected
+            self.sanitizer.note_resume(req, [])
+            return 0
+        return orig(self, req)
+
+    monkeypatch.setattr(Engine, "_map_cached", lossy)
+    eng = Engine(model, params, SMALL)
+    with pytest.raises(InvariantViolation) as e:
+        eng.run(_requests(prompts), max_steps=4000)
+    assert e.value.invariant == "preempt_resume"
+
+
 def test_step_corruption_caught_at_the_step(setup):
     """A corruption planted mid-run surfaces at the next step boundary,
     with the event-ring tail attached for post-mortem."""
