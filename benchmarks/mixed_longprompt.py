@@ -1,0 +1,168 @@
+"""Mixed long-prompt open-loop scenario: the tail-TBT cliff, gated.
+
+A chat-style decode stream (short prompts, steady token emission) is
+interrupted mid-flight by 2k-token prompts.  This is the workload the
+chunked-prefill subsystem exists for: monolithic prefill (sequential —
+and, phase-exclusively, splitwiser) stalls every in-flight decode for
+the whole prompt, so the chat stream's p99 inter-token gap explodes;
+``mode="chunked"`` carves the prompt into ``chunk_tokens``-budget
+chunks with the decodes riding in every round, bounding the gap by the
+budget.
+
+The arm is deterministic: a *work-proportional* virtual clock advances
+after each engine step by the number of tokens the step computed
+(prefill chunk + decode batch) plus one scheduling tick.  Unlike the
+open-loop counting clock (one tick per reading), inter-token gaps then
+model compute *cost* — a monolithic 2k-token prefill stalls in-flight
+decodes for ~2k ticks, a chunked one for ~``chunk_tokens`` — so the
+tail-TBT bound is a pure function of the scheduling trace and CI gates
+the p95/p99 percentiles exactly (``regression_gate.py``), plus
+zero-post-warm-recompile via the jit-dispatch sentinel.  Token streams
+must be bit-identical across the three modes at equal completed tokens:
+chunking changes *when* prompt tokens are prefilled, never *what* is
+generated.
+"""
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from benchmarks.common import make_requests, model_and_params, serve_cfg
+from repro.core.engine import Engine
+
+N_CHAT, CHAT_IN, CHAT_OUT = 4, 16, 24
+N_LONG, LONG_OUT = 2, 2
+CHUNK_TOKENS = 48                   # < one splitwiser prefill round
+                                    # (n_streams * prefill_chunk + decodes)
+MODES = ["sequential", "splitwiser", "chunked"]
+# virtual-tick arrivals: chat at t=0, the long prompts landing while the
+# chat streams are mid-decode (see the timeline note in _requests)
+LONG_ARRIVALS = (100.0, 140.0)
+
+
+class _WorkClock:
+    """Deterministic work-proportional time source (see module docstring);
+    the drive loop advances it explicitly, readings never tick."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, d: float) -> None:
+        self.t += float(d)
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, float(t))
+
+
+def _vp(vals, q):
+    vals = [v for v in vals if v is not None]
+    return None if not vals else round(float(np.percentile(vals, q)), 4)
+
+
+def _requests(vocab, long_in):
+    """4 chat requests at t=0 plus 2 long prompts arriving mid-stream.
+
+    Timeline sanity (work ticks): chat prefill costs ~CHAT_IN*N_CHAT
+    ticks, then each decode round costs ~1+N_CHAT — so the chat streams
+    emit from roughly t=70 to t>=185 in every mode, and arrivals at 100
+    and 140 land squarely inside the decode stream."""
+    chat = make_requests(N_CHAT, CHAT_IN, CHAT_OUT, vocab, seed=1,
+                         arrivals=[0.0] * N_CHAT)
+    longs = make_requests(N_LONG, long_in, LONG_OUT, vocab, seed=2,
+                          arrivals=LONG_ARRIVALS)
+    for i, r in enumerate(longs):
+        r.rid = N_CHAT + i
+    return chat + longs
+
+
+def _drive(eng, reqs, clock, max_steps=200_000):
+    """Open-loop feed on the work clock (the Engine.stream loop, with the
+    clock advanced per step by the tokens that step computed).  Warmup
+    replays and the measured run share this loop so the measured run
+    sees only shapes the warmups already compiled."""
+    t0 = clock.t
+    pending = deque(sorted(reqs, key=lambda r: (r.arrival or 0.0, r.rid)))
+    events = []
+    steps = 0
+    while (pending or not eng.idle()) and steps < max_steps:
+        while pending and t0 + pending[0].arrival <= clock.t:
+            r = pending.popleft()
+            r.arrival = t0 + r.arrival
+            eng.submit(r)
+        if pending and eng.idle():
+            clock.advance_to(t0 + pending[0].arrival)
+            continue
+        pf0 = eng.metrics.n_prefill_tokens
+        evs = eng.step()
+        events.extend(evs)
+        clock.advance(1 + (eng.metrics.n_prefill_tokens - pf0) + len(evs))
+        steps += 1
+    return events
+
+
+def _row(model, params, vocab, mode, long_in):
+    n_req = N_CHAT + N_LONG
+    sc = dataclasses.replace(
+        serve_cfg(mode, n_requests=n_req, input_tokens=long_in,
+                  output_tokens=CHAT_OUT, max_batch=8),
+        dispatch_sentinel=True)
+    if mode == "chunked":
+        sc = dataclasses.replace(sc, chunk_tokens=CHUNK_TOKENS)
+    clock = _WorkClock()
+    eng = Engine(model, params, sc, time_fn=clock)
+    # two warmup replays on the same engine (cold shapes, then any
+    # second-pass shapes) before arming the compiled-once check
+    for base in (1000, 2000):
+        warm = _requests(vocab, long_in)
+        for r in warm:
+            r.rid += base
+        _drive(eng, warm, clock)
+    eng.poll()
+    eng.dispatch.mark_warm()
+    reqs = _requests(vocab, long_in)
+    events = _drive(eng, reqs, clock)
+    outputs = eng.poll()
+    firsts = {e.rid: e.t for e in events if e.first}
+    gaps = []     # pooled inter-token gaps: the chat streams' TBT tail
+    for o in outputs:
+        gaps += [b - a for a, b in zip(o.token_times, o.token_times[1:])]
+    row = dict(
+        bench="mixed_longprompt_det", x=mode,
+        n_requests=n_req, n_done=len(outputs),
+        all_complete=all(o.finish_reason == "length" for o in outputs),
+        respects_arrivals=all(
+            firsts[o.rid] >= o.arrival for o in outputs),
+        completed_tokens=sum(len(o.tokens) for o in outputs),
+        long_input_tokens=long_in,
+        tbt_vp50=_vp(gaps, 50), tbt_vp95=_vp(gaps, 95),
+        tbt_vp99=_vp(gaps, 99),
+        n_preempted=sum(o.n_preempted for o in outputs),
+        dispatch_post_warm=sum(eng.dispatch.post_warm_compiles().values()),
+        streams={o.rid: list(o.tokens) for o in outputs},
+    )
+    if mode == "chunked":
+        s = eng.metrics.summary()
+        row["n_chunks"] = s["n_chunks"]
+        row["chunk_occupancy"] = s["chunk_occupancy"]
+    return row
+
+
+def rows(smoke: bool = False):
+    model, params = model_and_params("opt-125m")
+    vocab = model.cfg.vocab_size
+    long_in = 512 if smoke else 2048
+    out = [_row(model, params, vocab, mode, long_in) for mode in MODES]
+    ref = next(r for r in out if r["x"] == "sequential")["streams"]
+    for r in out:
+        r["tokens_match"] = r.pop("streams") == ref
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    for r in rows(smoke="--smoke" in sys.argv):
+        print(json.dumps(r, default=str))

@@ -16,12 +16,12 @@ baseline must not flip from pass to fail.
 
     # refresh the committed baseline after an intentional change:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep,open_loop \
+        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt \
         --json BENCH_baseline.json
 
     # what CI runs on every PR:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep,open_loop \
+        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt \
         --json bench_fresh.json
     PYTHONPATH=src python -m benchmarks.regression_gate \
         BENCH_baseline.json bench_fresh.json
@@ -58,6 +58,15 @@ GATED_FIELDS = {
     "ttft_vp95": ("max", "count"),
     "n_preempted": ("max", "count"),
     "dispatch_post_warm": ("max", "count"),
+    # mixed_longprompt_det rows: inter-token-gap percentiles on the
+    # work-proportional clock — the chunked mode's whole reason to exist
+    # is the p95/p99 bound, so a scheduler change that lets a long
+    # prompt stall decodes again fails here; completed tokens guard
+    # against "faster" runs that simply generated less
+    "tbt_vp50": ("max", "count"),
+    "tbt_vp95": ("max", "count"),
+    "tbt_vp99": ("max", "count"),
+    "completed_tokens": ("min", "count"),
 }
 # must not flip true -> false (seed_crash rows record True: the
 # oversubscribed pool *must* crash the seed admission policy)

@@ -25,9 +25,10 @@ def main() -> None:
                     help="write rows + validation results as JSON")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import batching, kv_usage, open_loop, phase_intensity
-    from benchmarks import policy_sweep, pressure, sanitizer_overhead
-    from benchmarks import shared_prefix, splitwiser_hf, splitwiser_vllm
+    from benchmarks import batching, kv_usage, mixed_longprompt, open_loop
+    from benchmarks import phase_intensity, policy_sweep, pressure
+    from benchmarks import sanitizer_overhead, shared_prefix, splitwiser_hf
+    from benchmarks import splitwiser_vllm
 
     # (name, rows_fn, accepts_smoke)
     suites = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("batching", batching.rows, False),                 # Figs 12-13
         ("pressure", pressure.rows, False),                 # beyond-paper: KV pressure
         ("open_loop", open_loop.rows, True),                # beyond-paper: Poisson arrivals
+        ("mixed_longprompt", mixed_longprompt.rows, True),  # beyond-paper: chunked tail TBT
         ("shared_prefix", shared_prefix.rows, False),       # beyond-paper: prefix cache
         ("policy_sweep", policy_sweep.rows, True),          # beyond-paper: policy matrix
         ("sanitizer_overhead", sanitizer_overhead.rows, False),  # analysis layer cost
@@ -120,6 +122,31 @@ def main() -> None:
             checks.append(("serving hot path stays compiled-once: zero "
                            "post-warmup recompiles on the served workload",
                            all(r["dispatch_post_warm"] == 0 for r in od)))
+        ml = by("mixed_longprompt_det")
+        if ml:
+            checks.append(("mixed long-prompt arm finishes every request "
+                           "with timed admission honored",
+                           all(r["n_done"] == r["n_requests"]
+                               and r["all_complete"]
+                               and r["respects_arrivals"] for r in ml)))
+            checks.append(("greedy streams bit-identical across serving "
+                           "modes on the mixed long-prompt workload",
+                           all(r["tokens_match"] for r in ml)))
+            by_mode = {r["x"]: r for r in ml}
+            if {"sequential", "splitwiser", "chunked"} <= by_mode.keys():
+                ch, seq, sw = (by_mode["chunked"], by_mode["sequential"],
+                               by_mode["splitwiser"])
+                checks.append(("chunked prefill bounds the tail: p99 TBT "
+                               "strictly below both monolithic modes at "
+                               "equal completed tokens",
+                               ch["tbt_vp99"] < seq["tbt_vp99"]
+                               and ch["tbt_vp99"] < sw["tbt_vp99"]
+                               and ch["completed_tokens"]
+                               == seq["completed_tokens"]
+                               == sw["completed_tokens"]))
+                checks.append(("chunked serving stays compiled-once on the "
+                               "mixed workload (zero post-warm recompiles)",
+                               ch["dispatch_post_warm"] == 0))
         sp = by("shared_prefix_delta")
         if sp:
             k1 = [r for r in sp if "K=1" in str(r["x"])][0]

@@ -55,7 +55,16 @@ Invariants checked
     * **scheduler budget honesty** — the pages an admission charged
       against the watermark budget bound what the request actually
       consumed from the free pool through the end of its prefill
-      (fresh allocations + reclaimable revivals + COW copies).
+      (fresh allocations + reclaimable revivals + COW copies).  In
+      ``mode="chunked"`` admission charges only the cached prefix plus
+      one chunk and the budget grows per scheduled chunk
+      (:meth:`KVSanitizer.note_chunk`), each growth a pre-commitment
+      computed before the chunk allocates;
+    * **chunk-plan packing** (``mode="chunked"``) — every round's
+      :class:`~repro.core.planner.ChunkPlan` packs all runnable decode
+      tokens, never carves a stream past its remaining prefill or the
+      budget the decodes leave, and is work-conserving
+      (:func:`~repro.core.planner.validate_plan`).
 
 On failure a structured :class:`InvariantViolation` is raised carrying
 the violated invariant's name, an allocator/trie/scheduler state dump,
@@ -443,6 +452,31 @@ class KVSanitizer:
         fired, so the charge deliberately ignores headroom and transient
         COW capacity — exempt from the budget check)."""
         self._budgets[rid] = (pages, override)
+
+    def note_chunk(self, rid: int, pages: int) -> None:
+        """Chunked mode scheduled another planner chunk of ``rid``'s
+        prefill, pre-committing ``pages`` more from the free pool
+        (admission charged only the cached prefix plus one chunk; the
+        budget grows chunk by chunk as the planner schedules the rest,
+        and :meth:`note_first_token` still bounds what the whole prefill
+        actually consumed)."""
+        if rid in self._budgets:
+            need, override = self._budgets[rid]
+            self._budgets[rid] = (need + pages, override)
+
+    def note_plan(self, plan, remaining, n_decode_tokens: int) -> None:
+        """Chunked mode produced ``plan`` for a round with per-stream
+        ``remaining`` prefill tokens and ``n_decode_tokens`` runnable
+        decodes; fail loudly if it breaks the packing contract (prefill
+        over the budget decodes leave, a stream carved past its
+        remainder, decodes dropped, or budget wasted while work
+        remains)."""
+        # lazy: keep the analysis layer importable without core modules
+        from repro.core.planner import validate_plan
+        try:
+            validate_plan(plan, remaining, n_decode_tokens)
+        except ValueError as e:
+            self._fail("chunk_plan", str(e))
 
     def note_preempt(self, req, committed: int) -> None:
         """``req`` is being preempted with ``committed`` tokens of useful

@@ -126,7 +126,7 @@ class ModelConfig:
 # Engine execution modes (see core/engine.py for what each arm means);
 # "mp2" from the paper is not an engine mode — benchmarks build it from two
 # "sequential" replicas (benchmarks/splitwiser_vllm.py).
-SERVE_MODES = ("sequential", "splitwiser", "splitwiser_mps")
+SERVE_MODES = ("sequential", "splitwiser", "splitwiser_mps", "chunked")
 
 
 @dataclass(frozen=True)
@@ -146,6 +146,10 @@ class ServeConfig:
     max_seq_len: int = 1024
     prefill_chunk: int = 128     # chunked-prefill chunk size in mixed mode
     n_streams: int = 2           # parallel prompt-processing streams (paper's #processes)
+    chunk_tokens: int = 256      # mode="chunked": per-round packed-token
+                                 # budget (core/planner.py) — decode tokens
+                                 # claim their share first, prefill chunks
+                                 # fill the rest; must be >= page_size
     # --- scheduler: pluggable policies (core/policies.py) ---
     watermark: float = 0.01      # fraction of the page pool kept free at admission
     decode_reserve: float = 0.5  # fraction of remaining max_new_tokens reserved
@@ -236,12 +240,17 @@ class ServeConfig:
                 f"sched_events_cap must be positive, got {self.sched_events_cap}")
         for knob in ("max_batch", "token_budget", "page_size", "n_pages",
                      "max_pages_per_seq", "max_seq_len", "prefill_chunk",
-                     "n_streams"):
+                     "n_streams", "chunk_tokens"):
             value = getattr(self, knob)
             if not isinstance(value, int) or isinstance(value, bool) \
                     or value <= 0:
                 raise ValueError(
                     f"{knob} must be a positive int, got {value!r}")
+        if self.chunk_tokens < self.page_size:
+            raise ValueError(
+                f"chunk_tokens ({self.chunk_tokens}) must be >= page_size "
+                f"({self.page_size}): a chunked round must be able to "
+                "commit at least one full KV page")
         if self.n_pages < 2:
             raise ValueError(
                 f"n_pages must be >= 2 (page n_pages-1 is the reserved "

@@ -4,12 +4,13 @@
 from repro.core.kv_cache import OutOfPages, PageAllocator
 from repro.core.metrics import EngineMetrics, RequestMetrics
 from repro.core.outputs import RequestOutput, TokenEvent
+from repro.core.planner import ChunkPlan, ChunkPlanner
 from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SamplingParams, sample_tokens
 from repro.core.scheduler import Scheduler
 
 __all__ = [
-    "EngineMetrics", "OutOfPages", "PageAllocator", "PrefixCache",
-    "RequestMetrics", "RequestOutput", "SamplingParams", "Scheduler",
-    "TokenEvent", "sample_tokens",
+    "ChunkPlan", "ChunkPlanner", "EngineMetrics", "OutOfPages",
+    "PageAllocator", "PrefixCache", "RequestMetrics", "RequestOutput",
+    "SamplingParams", "Scheduler", "TokenEvent", "sample_tokens",
 ]

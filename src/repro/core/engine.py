@@ -16,6 +16,15 @@ suites that exercise them are catalogued in EXPERIMENTS.md):
                     chunks share every GEMM in one XLA program (Fig. 9/10
                     "MPSx2"; also the paper's own stated next step, mixed
                     batching, §III-C1).
+  chunked         — SARATHI-style chunked prefill with piggybacked
+                    decodes: a ChunkPlanner (core/planner.py) carves
+                    in-flight prefills into fixed-token-budget chunks
+                    (ServeConfig.chunk_tokens), decode tokens claim their
+                    budget share first, and the whole round is ONE mixed
+                    dispatch — flat compute intensity, tail TBT bounded
+                    by the chunk budget even under 2k-token prompts.
+                    Admission budgets per-chunk pages (scheduler), so
+                    new requests interleave with in-flight prefills.
 
 ("mp2" — two replicas with split resources — is built from two
 "sequential" engines by benchmarks/splitwiser_vllm.py, not a mode here.)
@@ -79,6 +88,7 @@ from repro.configs.base import ServeConfig
 from repro.core.kv_cache import PageAllocator
 from repro.core.metrics import EngineMetrics, EventRing
 from repro.core.outputs import RequestOutput, TokenEvent
+from repro.core.planner import ChunkPlan, ChunkPlanner
 from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SamplingParams, greedy_tokens, sample_tokens
 from repro.core.scheduler import Scheduler
@@ -187,6 +197,12 @@ class Engine:
         self._step_parity = 0
         self._events: List[TokenEvent] = []
         self._outputs: List[RequestOutput] = []
+        # chunked mode: the phase planner owns the per-round packing
+        # decision; every other mode dispatches phases monolithically
+        self.planner = (ChunkPlanner(serve.chunk_tokens, serve.n_streams)
+                        if serve.mode == "chunked" else None)
+        if self.planner is not None:
+            self.metrics.chunk_budget = serve.chunk_tokens
         self.sched = Scheduler(self)
         # read-only runtime invariant checker (analysis/invariants.py);
         # None at the default "off" level so hot paths pay one None test
@@ -533,8 +549,14 @@ class Engine:
             kind = self._step_timesliced()
         elif mode == "splitwiser_mps":
             kind = self._step_fused()
-        else:   # unreachable: ServeConfig.__post_init__ validates mode
-            raise AssertionError(mode)
+        elif mode == "chunked":
+            kind = self._step_chunked()
+        else:
+            # ServeConfig.__post_init__ validates against SERVE_MODES, so
+            # reaching here means a mode was registered without a step path
+            raise RuntimeError(
+                f"no step path for serve mode {mode!r}; SERVE_MODES and "
+                "Engine.step() must be extended together")
         if kind == "idle" and self.metrics.n_preempt_events > n_pre:
             kind = "preempt"    # nothing dispatched, but evictions happened
         self.metrics.n_steps += 1
@@ -767,7 +789,7 @@ class Engine:
             if m.t_prefill_start is None:
                 m.t_prefill_start = self.now()
 
-    def _compose_prefill(self):
+    def _compose_prefill(self, plan: Optional[ChunkPlan] = None):
         """Build the prefill half of a mixed batch from the streams.
 
         A stream's final chunk is only scheduled when a decode slot is
@@ -777,8 +799,18 @@ class Engine:
         and retries once pages free up.  Streams already composed this
         step are protected from eviction (their chunk is about to write
         into their pages).
+
+        With a ``plan`` (chunked mode) each stream contributes exactly
+        its planned token count — the static row width is the plan's cap
+        (``chunk_tokens``) instead of ``prefill_chunk`` — and every
+        composed chunk pre-commits its page consumption to the sanitizer
+        (``note_chunk``): admission charged only the first chunk, so the
+        budget-honesty check grows with the plan, not the prompt.  A
+        skipped stream's planned tokens are *not* redistributed this
+        round (conservative; the next plan re-carves).
         """
-        P, C = self.serve.n_streams, self.serve.prefill_chunk
+        P = self.serve.n_streams
+        C = self.serve.prefill_chunk if plan is None else plan.cap
         p_tokens = np.zeros((P, C), np.int32)
         p_start = np.zeros((P,), np.int32)
         p_lens = np.zeros((P,), np.int32)
@@ -788,7 +820,8 @@ class Engine:
         for i, st in enumerate(self.streams):
             if st is None:
                 continue
-            n = min(C, len(st.tokens) - st.pos)
+            want = C if plan is None else plan.chunk_lens[i]
+            n = min(want, len(st.tokens) - st.pos)
             if n <= 0:
                 continue
             if st.pos + n >= len(st.tokens) and free_slots <= 0:
@@ -799,6 +832,9 @@ class Engine:
                 continue
             if st.pos + n >= len(st.tokens):
                 free_slots -= 1
+            if plan is not None and self.sanitizer is not None:
+                self.sanitizer.note_chunk(st.req.rid,
+                                          self._chunk_charge(st, n))
             self.alloc.extend_to(st.req.rid, st.pos + n + 1)
             self._apply_cow(self.alloc.prepare_write(st.req.rid, st.pos, n))
             bt = self.alloc.owned(st.req.rid)
@@ -810,6 +846,25 @@ class Engine:
             protect.add(st.req.rid)
             chunks.append((i, st, n))
         return p_tokens, p_start, p_lens, chunks
+
+    def _chunk_charge(self, st: _Stream, n: int) -> int:
+        """Upper bound on the free-pool pages ``st``'s next ``n``-token
+        chunk may consume: fresh tail pages, plus a COW copy for every
+        owned page in the chunk's write range that ``prepare_write``
+        could copy (shared with another reader, or registered in the
+        trie).  Computed BEFORE the chunk allocates, so the sanitizer's
+        chunked-mode budget stays a real pre-commitment rather than a
+        tautology."""
+        owned = self.alloc.owned(st.req.rid)
+        fresh = max(self.alloc.pages_needed(st.pos + n + 1) - len(owned), 0)
+        ps = self.serve.page_size
+        lo = st.pos // ps
+        hi = min((st.pos + n - 1) // ps, len(owned) - 1)
+        cow = sum(1 for p in owned[lo:hi + 1]
+                  if self.alloc.ref_count(p) > 1
+                  or (self.prefix_cache is not None
+                      and self.prefix_cache.is_cached(p)))
+        return fresh + cow
 
     def _advance_streams(self, chunks, p_logits, t):
         completing = [None] * len(self.streams)
@@ -839,6 +894,55 @@ class Engine:
             active[i] = True
         return tokens, lens, active
 
+    def _dispatch_mixed(self, composed, with_decode: bool) -> bool:
+        """Dispatch ONE mixed program over the composed prefill chunks
+        and advance both halves on a single timestamp — the shared tail
+        of the fused, time-sliced, and chunked step paths.
+
+        ``with_decode=True`` (fused/chunked) packs every decode slot in:
+        the decode arrays stay ``max_batch``-sized even when no slot is
+        active, so the mode keeps one static program shape.
+        ``with_decode=False`` (the time-sliced prefill phase) dispatches
+        the same kernel phase-exclusively with zero-size decode arrays.
+        Returns False when there was nothing to dispatch.
+        """
+        p_tokens, p_start, p_lens, chunks = composed
+        if with_decode:
+            d_tokens, d_lens, d_active = self._decode_inputs()
+            if not chunks and not d_active.any():
+                return False
+            d_half = dict(
+                d_tokens=jnp.asarray(d_tokens),
+                d_table=jnp.asarray(self.block_tables),
+                d_lens=jnp.asarray(d_lens),
+                d_active=jnp.asarray(d_active),
+            )
+        else:
+            if not chunks:
+                return False
+            Pmax = self.serve.max_pages_per_seq
+            d_active = np.zeros((0,), bool)
+            d_half = dict(
+                d_tokens=jnp.zeros((0,), jnp.int32),
+                d_table=jnp.zeros((0, Pmax), jnp.int32),
+                d_lens=jnp.zeros((0,), jnp.int32),
+                d_active=jnp.zeros((0,), bool),
+            )
+        mb = dict(
+            p_tokens=jnp.asarray(p_tokens),
+            p_table=jnp.asarray(self.stream_tables),
+            p_start=jnp.asarray(p_start),
+            p_lens=jnp.asarray(p_lens),
+            **d_half,
+        )
+        p_logits, d_logits, (self.k_pages, self.v_pages), _ = self._mixed(
+            self.params, mb, self.k_pages, self.v_pages)
+        t = self.now()
+        if d_active.size and d_active.any():
+            self._advance_decode(d_logits, d_active, t)
+        self._advance_streams(chunks, p_logits, t)
+        return True
+
     def _step_fused(self) -> str:
         """splitwiser_mps: ONE program runs both phases (the contribution)."""
         self._refill_streams()
@@ -847,26 +951,9 @@ class Engine:
         # of the decode half), the reverse would dispatch a chunk into a
         # preempted stream's freed pages.
         self._reserve_decode_pages()
-        p_tokens, p_start, p_lens, chunks = self._compose_prefill()
-        d_tokens, d_lens, d_active = self._decode_inputs()
-        if not chunks and not d_active.any():
-            return "idle"
-        mb = dict(
-            p_tokens=jnp.asarray(p_tokens),
-            p_table=jnp.asarray(self.stream_tables),
-            p_start=jnp.asarray(p_start),
-            p_lens=jnp.asarray(p_lens),
-            d_tokens=jnp.asarray(d_tokens),
-            d_table=jnp.asarray(self.block_tables),
-            d_lens=jnp.asarray(d_lens),
-            d_active=jnp.asarray(d_active),
-        )
-        p_logits, d_logits, (self.k_pages, self.v_pages), _ = self._mixed(
-            self.params, mb, self.k_pages, self.v_pages)
-        t = self.now()
-        self._advance_decode(d_logits, d_active, t)
-        self._advance_streams(chunks, p_logits, t)
-        return "mixed"
+        if self._dispatch_mixed(self._compose_prefill(), with_decode=True):
+            return "mixed"
+        return "idle"
 
     def _step_timesliced(self) -> str:
         """splitwiser (no MPS): phases alternate as separate programs."""
@@ -876,30 +963,42 @@ class Engine:
         has_decode = any(self.slots)
         do_prefill = has_chunks and (self._step_parity == 0 or not has_decode)
         self._step_parity ^= 1
-        if do_prefill:
-            # phase-exclusive program: prefill chunks only (B=0 decode part)
-            p_tokens, p_start, p_lens, chunks = self._compose_prefill()
-            if chunks:
-                Pmax = self.serve.max_pages_per_seq
-                mb = dict(
-                    p_tokens=jnp.asarray(p_tokens),
-                    p_table=jnp.asarray(self.stream_tables),
-                    p_start=jnp.asarray(p_start),
-                    p_lens=jnp.asarray(p_lens),
-                    d_tokens=jnp.zeros((0,), jnp.int32),
-                    d_table=jnp.zeros((0, Pmax), jnp.int32),
-                    d_lens=jnp.zeros((0,), jnp.int32),
-                    d_active=jnp.zeros((0,), bool),
-                )
-                p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
-                    self.params, mb, self.k_pages, self.v_pages)
-                self._advance_streams(chunks, p_logits, self.now())
-                return "prefill_chunk"
-            # slot backpressure / page pressure filtered out every chunk:
-            # don't dispatch an empty program, fall through to decode
+        # phase-exclusive program: prefill chunks only (B=0 decode part);
+        # when slot backpressure / page pressure filtered out every chunk,
+        # don't dispatch an empty program — fall through to decode
+        if do_prefill and self._dispatch_mixed(self._compose_prefill(),
+                                               with_decode=False):
+            return "prefill_chunk"
         if has_decode and self._do_decode():
             return "decode"
         return "idle"
+
+    def _step_chunked(self) -> str:
+        """chunked: the planner packs the round, the engine dispatches it.
+
+        Every runnable decode token rides in every round (never starved,
+        never stalled behind a prompt); the planner carves the remaining
+        ``chunk_tokens`` budget over the in-flight prefill streams.  One
+        mixed dispatch per round — a 2k-token prompt becomes a train of
+        budget-bounded chunks interleaved with live decodes, so tail TBT
+        is bounded by the chunk budget instead of the prompt length."""
+        self._refill_streams()
+        self._reserve_decode_pages()
+        n_decode = sum(s is not None for s in self.slots)
+        remaining = [0 if st is None else max(len(st.tokens) - st.pos, 0)
+                     for st in self.streams]
+        plan = self.planner.plan(remaining, n_decode)
+        if self.sanitizer is not None:
+            self.sanitizer.note_plan(plan, remaining, n_decode)
+        composed = self._compose_prefill(plan)
+        if not self._dispatch_mixed(composed, with_decode=True):
+            return "idle"
+        chunks = composed[3]
+        self.metrics.n_chunks += len(chunks)
+        packed = sum(n for _, _, n in chunks) + n_decode
+        hist = self.metrics.packed_tokens_hist
+        hist[packed] = hist.get(packed, 0) + 1
+        return "mixed"
 
     def _advance_decode(self, d_logits, d_active, t):
         rows = [s.req if (s is not None and d_active[i]) else None

@@ -116,6 +116,12 @@ class EngineMetrics:
     # allocator/cache counters snapshot, refreshed by the engine each step:
     # {"n_reclaims", "n_cow", "n_shared_maps", "pages_shared", ...}
     prefix_cache_stats: Dict[str, int] = field(default_factory=dict)
+    # --- chunked-prefill planner (core/planner.py, mode="chunked") ---
+    n_chunks: int = 0            # prefill chunks dispatched by the planner
+    chunk_budget: int = 0        # ServeConfig.chunk_tokens (0 off-mode)
+    # packed tokens (prefill chunks + decodes) per mixed round -> rounds
+    # dispatched at that packing; occupancy derives from it in summary()
+    packed_tokens_hist: Dict[int, int] = field(default_factory=dict)
 
     def req(self, rid: int) -> RequestMetrics:
         if rid not in self.requests:
@@ -171,4 +177,13 @@ class EngineMetrics:
             "prefix_cache": dict(self.prefix_cache_stats),
             "sched_events_dropped": getattr(self.sched_events, "n_dropped", 0),
             "policy_counters": dict(self.policy_counters),
+            "n_chunks": self.n_chunks,
+            # mean packed tokens per mixed round over chunk_tokens; can
+            # exceed 1.0 when the decode batch alone outgrows the budget
+            "chunk_occupancy": (
+                sum(k * v for k, v in self.packed_tokens_hist.items())
+                / (self.chunk_budget
+                   * max(sum(self.packed_tokens_hist.values()), 1))
+                if self.chunk_budget else None),
+            "packed_tokens_hist": dict(sorted(self.packed_tokens_hist.items())),
         }

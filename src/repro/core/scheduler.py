@@ -114,7 +114,7 @@ class Scheduler:
         return int(math.ceil(self.serve.watermark * (self.alloc.n_pages - 1)))
 
     def admission_pages(self, req, free_cached: int = 0,
-                        cow_extra: int = 0) -> int:
+                        cow_extra: int = 0, n_hit: int = 0) -> int:
         """Pages to budget for admitting `req`: prompt (plus any tokens
         generated before a preemption) + 1, plus `decode_reserve` of the
         remaining generation as decode headroom.  The generation budget
@@ -130,10 +130,22 @@ class Scheduler:
         donor is revived for the COW copy (the copy's destination page
         is already inside ``pages_needed``; the donor returns to the
         reclaimable pool once the copy exists).
+
+        In ``mode="chunked"`` admission budgets *per-chunk* pages
+        instead of the whole prompt: the cached prefix (``n_hit`` full
+        pages — mapped in their entirety at admission) plus ONE planner
+        chunk (``serve.chunk_tokens``).  Later chunks pre-commit their
+        pages as the planner schedules them (``Engine._compose_prefill``
+        → ``KVSanitizer.note_chunk``), so a long prompt stops reserving
+        the pool up front and admission interleaves with in-flight
+        prefills.
         """
         remaining = max(req.sampling.max_new_tokens - len(req.out_tokens), 1)
         headroom = int(self.serve.decode_reserve * (remaining - 1))
         n_prefill = len(req.prompt) + len(req.out_tokens)
+        if self.serve.mode == "chunked":
+            n_prefill = min(n_prefill, n_hit * self.alloc.page_size
+                            + self.serve.chunk_tokens)
         need = self.alloc.pages_needed(n_prefill + 1 + headroom)
         return max(need - free_cached, 0) + cow_extra
 
@@ -164,7 +176,7 @@ class Scheduler:
         behind its own reservation)."""
         bare = self._bare_pages(r)      # raises when it can never fit
         n_hit, n_free_hit, cow_extra = self.probe(r)
-        need = self.admission_pages(r, n_free_hit, cow_extra)
+        need = self.admission_pages(r, n_free_hit, cow_extra, n_hit)
         override = False
         if need > budget:
             if not (first and self.alloc.n_allocated == 0):

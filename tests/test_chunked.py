@@ -1,0 +1,302 @@
+"""Chunked-prefill mixed-dispatch subsystem (``mode="chunked"``).
+
+The contract under test, at three layers:
+
+* **Planner** (pure): decodes pack unconditionally, prefill chunks fill
+  the leftover budget work-conservingly, the rotating cursor keeps tight
+  budgets fair, and :func:`validate_plan` rejects every way a plan can
+  break the packing contract (mutation-style, so the sanitizer's
+  ``chunk_plan`` invariant is live, not vacuous).
+* **Engine**: chunked greedy streams are bit-identical to the sequential
+  oracle across the full ``admission x eviction x preempt`` policy
+  matrix (randomized interleavings of chunk boundary x partial-prefix
+  hit x preemption/resume live in ``test_chunked_properties.py``, which
+  needs hypothesis).  Final allocator/cache state fingerprints match
+  the monolithic modes exactly, and the pressured run drives real
+  preemptions through the differential preempt/resume checker.
+* **Scheduler/metrics**: admission charges one chunk's pages instead of
+  the whole prompt; live decodes ride in *every* round while a long
+  prompt prefills (the tail-TBT property, asserted on the event stream);
+  ``n_chunks`` / occupancy / packed-token histogram surface in summary().
+"""
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.analysis.differential import run_cross_mode
+from repro.analysis.invariants import InvariantViolation
+from repro.configs import ServeConfig
+from repro.configs.base import SERVE_MODES
+from repro.core.engine import Engine, Request, SamplingParams
+from repro.core.planner import ChunkPlan, ChunkPlanner, validate_plan
+
+ARCH = "qwen3-0.6b"
+PS = 4
+N_NEW = 8
+BASE = ServeConfig(mode="chunked", max_batch=3, page_size=PS, n_pages=26,
+                   max_pages_per_seq=12, prefill_chunk=PS, n_streams=2,
+                   chunk_tokens=8, enable_prefix_cache=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _workload(vocab, seed=0):
+    """test_policies' pressured shared-prefix workload: adjacent twins
+    (same-round identical prefixes) plus a unique prompt."""
+    rng = np.random.RandomState(seed)
+    a = list(rng.randint(2, vocab, size=12))
+    b = list(rng.randint(2, vocab, size=12))
+    prompts = [a + [11, 12], a + [13, 14], b + [15, 16], b + [17, 18],
+               list(rng.randint(2, vocab, size=14))]
+    return [Request(rid=i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=N_NEW))
+            for i, p in enumerate(prompts)]
+
+
+@pytest.fixture(scope="module")
+def oracle(setup):
+    """Cache-off, generous-pool sequential greedy reference."""
+    model, params = setup
+    serve = dataclasses.replace(BASE, mode="sequential", n_pages=128,
+                                enable_prefix_cache=False)
+    reqs = _workload(model.cfg.vocab_size)
+    Engine(model, params, serve).run(reqs, max_steps=4000)
+    return [r.out_tokens for r in reqs]
+
+
+# ================================================== planner unit tests ====
+def test_decodes_claim_budget_first():
+    p = ChunkPlanner(chunk_tokens=8, n_streams=2)
+    plan = p.plan([100, 100], n_decode_tokens=3)
+    assert plan.n_decode_tokens == 3
+    assert plan.n_prefill_tokens == 5          # 8 - 3 left for prefill
+    assert plan.n_packed_tokens == 8
+    assert plan.occupancy == 1.0
+
+
+def test_decode_batch_alone_may_exceed_budget():
+    """Decodes are never dropped to fit: a decode batch bigger than the
+    budget packs whole and prefill gets nothing."""
+    p = ChunkPlanner(chunk_tokens=4, n_streams=2)
+    plan = p.plan([50, 50], n_decode_tokens=6)
+    assert plan.chunk_lens == (0, 0)
+    assert plan.n_packed_tokens == 6
+    assert plan.occupancy > 1.0
+
+
+def test_carve_is_work_conserving():
+    p = ChunkPlanner(chunk_tokens=16, n_streams=3)
+    plan = p.plan([2, 0, 3], n_decode_tokens=0)
+    assert plan.chunk_lens == (2, 0, 3)        # everything available taken
+    validate_plan(plan, [2, 0, 3], 0)
+
+
+def test_cursor_rotates_for_fairness():
+    """Budget too small for both streams: the passed-over stream goes
+    first next round instead of starving behind a long prompt."""
+    p = ChunkPlanner(chunk_tokens=4, n_streams=2)
+    assert p.plan([100, 100], 0).chunk_lens == (4, 0)
+    assert p.plan([100, 100], 0).chunk_lens == (0, 4)
+    assert p.plan([100, 100], 0).chunk_lens == (4, 0)
+
+
+def test_planner_ctor_validates():
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ChunkPlanner(0, 2)
+    with pytest.raises(ValueError, match="n_streams"):
+        ChunkPlanner(8, 0)
+
+
+def test_plan_inputs_validated():
+    p = ChunkPlanner(8, 2)
+    with pytest.raises(ValueError, match="stream remainders"):
+        p.plan([1, 2, 3], 0)
+    with pytest.raises(ValueError, match="n_decode_tokens"):
+        p.plan([1, 2], -1)
+
+
+# Mutation-style proofs that every clause of the packing contract is
+# enforced — if a validate_plan check regresses to a no-op, its test fails.
+@pytest.mark.parametrize("plan,remaining,n_decode,msg", [
+    (ChunkPlan((4, 0), 1, 8, 8), [10, 10], 2, "unconditionally"),
+    (ChunkPlan((5, 0), 0, 8, 8), [3, 10], 0, "remaining prefill"),
+    (ChunkPlan((-1, 0), 0, 8, 8), [3, 10], 0, "negative"),
+    (ChunkPlan((4, 4), 2, 8, 8), [10, 10], 2, "budget"),
+    (ChunkPlan((9, 0), 0, 8, 4), [10, 0], 0, "cap"),
+    (ChunkPlan((2, 0), 0, 8, 8), [2, 10], 0, "work-conserving"),
+    (ChunkPlan((4,), 0, 8, 8), [10, 10], 0, "streams"),
+])
+def test_validate_plan_rejects_contract_breaks(plan, remaining, n_decode, msg):
+    with pytest.raises(ValueError, match=msg):
+        validate_plan(plan, remaining, n_decode)
+
+
+# ===================================================== config plumbing ====
+def test_chunked_registered_and_knob_validated():
+    assert "chunked" in SERVE_MODES
+    ServeConfig(mode="chunked", chunk_tokens=16, page_size=16)  # fine
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeConfig(chunk_tokens=0)
+    with pytest.raises(ValueError, match="page_size"):
+        ServeConfig(chunk_tokens=8, page_size=16)
+
+
+def test_unknown_mode_fails_loud(setup):
+    """A mode registered in SERVE_MODES without a step path must raise,
+    not silently no-op (step() holds the only mode dispatch)."""
+    model, params = setup
+    eng = Engine(model, params, dataclasses.replace(BASE, mode="sequential"))
+    object.__setattr__(eng.serve, "mode", "time_warp")
+    with pytest.raises(RuntimeError, match="no step path"):
+        eng.step()
+
+
+# ============================================= stream-level equivalence ====
+def test_greedy_bit_identical_across_policy_matrix(setup, oracle):
+    """Chunking changes *when* prompt tokens are prefilled, never *what*
+    is generated: oracle-exact under every policy combination, with the
+    pool fully drained."""
+    model, params = setup
+    matrix = list(itertools.product(("fcfs", "cache_aware"),
+                                    ("lru", "fifo", "cost"),
+                                    ("latest", "cache_aware")))
+    for adm, ev, pre in matrix:
+        serve = dataclasses.replace(BASE, admission_policy=adm,
+                                    eviction_policy=ev, preempt_policy=pre)
+        eng = Engine(model, params, serve)
+        reqs = _workload(model.cfg.vocab_size)
+        s = eng.run(reqs, max_steps=8000).summary()
+        assert s["n_done"] == len(reqs), (adm, ev, pre)
+        assert [r.out_tokens for r in reqs] == oracle, (adm, ev, pre)
+        assert eng.alloc.n_allocated == 0 and eng.idle()
+
+
+def test_cross_mode_state_fingerprints_identical(setup):
+    """Ample pool: chunked leaves byte-for-byte the same final
+    allocator/cache state (by token path) as both monolithic modes."""
+    model, params = setup
+    roomy = dataclasses.replace(BASE, n_pages=96, sanitize_level="step")
+    report = run_cross_mode(
+        lambda mode: Engine(model, params,
+                            dataclasses.replace(roomy, mode=mode)),
+        lambda: _workload(model.cfg.vocab_size),
+        modes=("sequential", "splitwiser", "chunked"),
+        max_steps=8000)
+    assert report["streams_match"]
+    assert all(d == [] for d in report["state_diffs"].values()), \
+        report["state_diffs"]
+    assert report["fingerprints"]["chunked"]["chains"]
+
+
+def test_pressured_run_exercises_preempt_promises(setup, oracle):
+    """A pool tight enough to actually preempt mid-prompt (per-chunk
+    admission packs more requests in than monolithic budgeting, so it
+    takes a smaller pool than the matrix test's 26 pages): resume
+    re-enters mid-chunk via the committed pages — audited by the
+    differential preempt/resume checker (step sanitizer), which stayed
+    silent."""
+    model, params = setup
+    eng = Engine(model, params,
+                 dataclasses.replace(BASE, n_pages=18,
+                                     sanitize_level="step"))
+    reqs = _workload(model.cfg.vocab_size)
+    m = eng.run(reqs, max_steps=8000)
+    assert m.summary()["n_done"] == len(reqs)
+    assert m.n_preempt_events > 0            # the checker had work to do
+    assert not eng.sanitizer._preempt_snaps  # every promise was settled
+    assert [r.out_tokens for r in reqs] == oracle
+
+
+# =============================================== scheduler + sanitizer ====
+def test_admission_charges_per_chunk_not_whole_prompt(setup):
+    """A 64-token prompt: monolithic admission budgets ~17 pages up
+    front; chunked admission budgets one chunk (+decode headroom) and
+    grows the budget per scheduled chunk."""
+    model, params = setup
+    req = Request(rid=0, prompt=list(range(2, 66)),
+                  sampling=SamplingParams(max_new_tokens=4))
+    roomy = dataclasses.replace(BASE, n_pages=64, max_pages_per_seq=32)
+    chunked_need = Engine(model, params, roomy).sched.admission_pages(req)
+    seq_need = Engine(
+        model, params, dataclasses.replace(roomy, mode="sequential"),
+    ).sched.admission_pages(req)
+    assert chunked_need < seq_need
+    # the chunk charge covers the budget's worth of tokens, nothing more
+    assert chunked_need <= (BASE.chunk_tokens // PS) + 2
+
+
+def test_sanitizer_flags_contract_breaking_plan(setup):
+    """Wiring proof for the ``chunk_plan`` invariant: a planner that
+    drops a decode token is caught at the very next step."""
+    model, params = setup
+
+    class _DropsDecodes:
+        def plan(self, remaining, n_decode_tokens):
+            return ChunkPlan(tuple(0 for _ in remaining),
+                             max(n_decode_tokens - 1, 0),
+                             BASE.chunk_tokens, BASE.chunk_tokens)
+
+    eng = Engine(model, params,
+                 dataclasses.replace(BASE, sanitize_level="step"))
+    eng.planner = _DropsDecodes()
+    with pytest.raises(InvariantViolation) as e:
+        eng.run(_workload(model.cfg.vocab_size), max_steps=8000)
+    assert e.value.invariant == "chunk_plan"
+
+
+# =========================================== tail-TBT property + metrics ====
+def test_decodes_ride_every_round_during_long_prefill(setup):
+    """The property the subsystem exists for: while a long prompt
+    prefills chunk by chunk, an in-flight decode emits a token on every
+    single round — under splitwiser the same scenario has whole rounds
+    with no decode event (the phase-exclusive prefill steps)."""
+    model, params = setup
+    rng = np.random.RandomState(3)
+    vocab = model.cfg.vocab_size
+    short = list(rng.randint(2, vocab, size=4))
+    long_p = list(rng.randint(2, vocab, size=48))
+
+    def starved_rounds(mode):
+        serve = dataclasses.replace(BASE, mode=mode, n_pages=96,
+                                    max_pages_per_seq=24)
+        eng = Engine(model, params, serve)
+        sr = Request(rid=0, prompt=list(short),
+                     sampling=SamplingParams(max_new_tokens=16))
+        eng.submit(sr)
+        while not sr.out_tokens:             # short request mid-decode...
+            eng.step()
+        eng.submit(Request(rid=1, prompt=list(long_p),   # ...enter the
+                           sampling=SamplingParams(max_new_tokens=2)))
+        starved = 0
+        while len(sr.out_tokens) < 16:
+            evs = eng.step()
+            if not any(ev.rid == sr.rid for ev in evs):
+                starved += 1
+        while not eng.idle():
+            eng.step()
+        return starved
+
+    assert starved_rounds("chunked") == 0
+    assert starved_rounds("splitwiser") > 0
+
+
+def test_chunk_metrics_surface_in_summary(setup):
+    model, params = setup
+    eng = Engine(model, params, dataclasses.replace(BASE, n_pages=96))
+    s = eng.run(_workload(model.cfg.vocab_size), max_steps=8000).summary()
+    assert s["n_chunks"] > 0
+    assert 0.0 < s["chunk_occupancy"] <= 2.0
+    hist = s["packed_tokens_hist"]
+    assert hist and all(k > 0 and v > 0 for k, v in hist.items())
+    # one histogram entry per mixed round, each within budget + decodes
+    assert sum(hist.values()) == eng.metrics.step_kinds.count("mixed")
+    assert max(hist) <= BASE.chunk_tokens + BASE.max_batch

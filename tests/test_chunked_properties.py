@@ -1,0 +1,116 @@
+"""Hypothesis properties for the chunked-prefill subsystem.
+
+Two layers (the deterministic chunked suite lives in
+``test_chunked.py``; this file needs hypothesis and skips without it):
+
+* **Planner drain**: any (remaining, decodes) round yields a plan that
+  passes its own :func:`validate_plan`, never over-packs the budget the
+  decodes left over, and — driven round by round — drains a workload
+  exactly when the budget allows prefill progress at all.
+* **Engine interleavings**: random chunk boundary (aligned and mid-page
+  budgets) x partial-prefix hit (shared prefixes ending mid-page) x
+  preemption/resume (a 16-page pool oversubscribes) keep greedy streams
+  oracle-exact with the step-level sanitizer on, so every eviction runs
+  through the differential preempt/resume checker and every round's
+  plan through the ``chunk_plan`` packing invariant.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_model
+from repro.configs import ServeConfig
+from repro.core.engine import Engine, Request, SamplingParams
+from repro.core.planner import ChunkPlanner, validate_plan
+
+# "ci" profile (HYPOTHESIS_PROFILE=ci): fixed seed, no deadline — property
+# tests cannot time out or flake on slow shared runners.
+settings.register_profile(
+    "ci", max_examples=40, deadline=None, derandomize=True,
+    database=None, print_blob=False)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+
+ARCH = "qwen3-0.6b"
+PS = 4
+BASE = ServeConfig(mode="chunked", max_batch=3, page_size=PS, n_pages=26,
+                   max_pages_per_seq=12, prefill_chunk=PS, n_streams=2,
+                   chunk_tokens=8, enable_prefix_cache=True)
+
+
+# ------------------------------------------------------- planner drain ----
+@given(budget=st.integers(1, 64), n_streams=st.integers(1, 4),
+       n_decode=st.integers(0, 12), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_planner_always_emits_valid_plans(budget, n_streams, n_decode, data):
+    p = ChunkPlanner(budget, n_streams)
+    remaining = data.draw(st.lists(st.integers(0, 100), min_size=n_streams,
+                                   max_size=n_streams))
+    total = sum(remaining)
+    for _ in range(sum(remaining) + 1):
+        plan = p.plan(remaining, n_decode)
+        validate_plan(plan, remaining, n_decode)
+        assert plan.n_prefill_tokens <= max(budget - n_decode, 0)
+        remaining = [r - c for r, c in zip(remaining, plan.chunk_lens)]
+        total -= plan.n_prefill_tokens
+        if plan.n_prefill_tokens == 0:
+            break
+    # either the workload drained, or decodes saturate the budget and no
+    # prefill progress is possible by contract
+    assert (total == 0) or (budget <= n_decode)
+
+
+# ------------------------------------------------ engine interleavings ----
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+_ORACLES = {}   # workload signature -> greedy streams (sequential ref)
+
+
+def _oracle_streams(model, params, prompts, n_new):
+    key = (tuple(tuple(p) for p in prompts), n_new)
+    if key not in _ORACLES:
+        serve = dataclasses.replace(BASE, mode="sequential", n_pages=128,
+                                    enable_prefix_cache=False)
+        reqs = [Request(rid=i, prompt=list(p),
+                        sampling=SamplingParams(max_new_tokens=n_new))
+                for i, p in enumerate(prompts)]
+        Engine(model, params, serve).run(reqs, max_steps=4000)
+        _ORACLES[key] = [r.out_tokens for r in reqs]
+    return _ORACLES[key]
+
+
+@given(chunk_tokens=st.integers(PS, 14),
+       shared_len=st.integers(4, 13),
+       tails=st.lists(st.integers(1, 6), min_size=2, max_size=3),
+       n_pages=st.sampled_from([16, 20, 40]),
+       n_new=st.integers(3, 6))
+@settings(max_examples=8, deadline=None, database=None, derandomize=True)
+def test_interleaving_properties(setup, chunk_tokens, shared_len, tails,
+                                 n_pages, n_new):
+    model, params = setup
+    rng = np.random.RandomState(chunk_tokens * 131 + shared_len)
+    vocab = model.cfg.vocab_size
+    shared = list(rng.randint(2, vocab, size=shared_len))
+    prompts = [shared + list(rng.randint(2, vocab, size=t)) for t in tails]
+    serve = dataclasses.replace(BASE, chunk_tokens=chunk_tokens,
+                                n_pages=n_pages, sanitize_level="step")
+    eng = Engine(model, params, serve)
+    reqs = [Request(rid=i, prompt=list(p),
+                    sampling=SamplingParams(max_new_tokens=n_new))
+            for i, p in enumerate(prompts)]
+    s = eng.run(reqs, max_steps=6000).summary()
+    assert s["n_done"] == len(reqs)
+    assert ([r.out_tokens for r in reqs]
+            == _oracle_streams(model, params, prompts, n_new))
+    assert eng.alloc.n_allocated == 0 and eng.idle()
+    assert not eng.sanitizer._preempt_snaps

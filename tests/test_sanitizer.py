@@ -177,8 +177,9 @@ def test_underbudgeted_admission_detected(setup, monkeypatch):
     for every admission — prefill consumption then exceeds the recorded
     budget and the first-token hook must flag it."""
     model, params, prompts = setup
-    monkeypatch.setattr(Scheduler, "admission_pages",
-                        lambda self, req, free_cached=0, cow_extra=0: 0)
+    monkeypatch.setattr(
+        Scheduler, "admission_pages",
+        lambda self, req, free_cached=0, cow_extra=0, n_hit=0: 0)
     eng = Engine(model, params, SMALL)
     with pytest.raises(InvariantViolation) as e:
         eng.run(_requests(prompts), max_steps=4000)
