@@ -28,6 +28,58 @@ def _serve(mode):
                        max_pages_per_seq=12, prefill_chunk=16, n_streams=2)
 
 
+def int8_rows():
+    """``pressure_kv_int8``: fp vs int8 KV pages at EQUAL pool bytes on
+    the same oversubscribed workload.  ``kv_dtype="int8"`` shrinks a page
+    to codes + a per-(token, head) f32 scale, so the byte-denominated
+    pool holds >= 1.8x as many usable pages — under the identical page
+    budget the scheduler preempts strictly less (usually not at all),
+    int8 greedy streams stay bit-identical across all modes, and
+    ``fp_agreement`` records the per-token fp-vs-int8 agreement (the
+    quantization tolerance story; see EXPERIMENTS.md)."""
+    model, params = model_and_params("opt-125m")
+    vocab = model.cfg.vocab_size
+    runs = []
+    for mode in MODES:
+        cells = {}
+        for kv in ("fp", "int8"):
+            eng = Engine(model, params,
+                         dataclasses.replace(_serve(mode), kv_dtype=kv))
+            reqs = make_requests(N_REQ, INPUT, OUTPUT, vocab)
+            s = eng.run(reqs, max_steps=20_000).summary()
+            cells[kv] = (s, eng.alloc.n_pages - 1,
+                         [r.out_tokens for r in reqs])
+        runs.append((mode, cells))
+    ref_i8_toks = runs[0][1]["int8"][2]
+    out = []
+    for mode, cells in runs:
+        (fp, fp_pages, fp_toks) = cells["fp"]
+        (i8, i8_pages, i8_toks) = cells["int8"]
+        agree = [t == u for ts, us in zip(fp_toks, i8_toks)
+                 for t, u in zip(ts, us)]
+        out.append(dict(
+            bench="pressure_kv_int8", x=mode,
+            n_requests=N_REQ,
+            n_done=min(fp["n_done"], i8["n_done"]),
+            all_complete=(fp["n_done"] == N_REQ == i8["n_done"]),
+            usable_pages_fp=fp_pages, usable_pages_int8=i8_pages,
+            page_ratio=round(i8_pages / fp_pages, 3),
+            pool_bytes_fp=fp["kv_pool_bytes"],
+            pool_bytes_int8=i8["kv_pool_bytes"],
+            preemptions_fp=fp["n_preemptions"],
+            preemptions_int8=i8["n_preemptions"],
+            n_quant_pages=i8["n_quant_pages"],
+            kv_peak_fp=round(fp["kv_usage_peak"], 4),
+            kv_peak_int8=round(i8["kv_usage_peak"], 4),
+            # int8 streams are bit-identical ACROSS MODES; vs fp they
+            # agree only up to quantization (argmax can flip), reported
+            # as a fraction rather than gated as equality
+            tokens_match=i8_toks == ref_i8_toks,
+            fp_agreement=round(sum(agree) / max(len(agree), 1), 4),
+        ))
+    return out
+
+
 def rows():
     model, params = model_and_params("opt-125m")
     vocab = model.cfg.vocab_size

@@ -67,6 +67,14 @@ GATED_FIELDS = {
     "tbt_vp95": ("max", "count"),
     "tbt_vp99": ("max", "count"),
     "completed_tokens": ("min", "count"),
+    # int8 KV rows (pressure_kv_int8 / shared_prefix_int8_delta): the
+    # byte-denominated pool's page multiplier must not shrink, the int8
+    # arm must not start preempting, and its prefix-cache hit capacity
+    # on the tight pool must not fall back to the fp arm's level
+    "page_ratio": ("min", "count"),
+    "preemptions_int8": ("max", "count"),
+    "cached_tokens_int8": ("min", "count"),
+    "hit_rate_int8": ("min", "rate"),
 }
 # must not flip true -> false (seed_crash rows record True: the
 # oversubscribed pool *must* crash the seed admission policy)

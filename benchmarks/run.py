@@ -38,9 +38,11 @@ def main() -> None:
         ("splitwiser_vllm", splitwiser_vllm.rows, False),   # Figs 10-11
         ("batching", batching.rows, False),                 # Figs 12-13
         ("pressure", pressure.rows, False),                 # beyond-paper: KV pressure
+        ("pressure_int8", pressure.int8_rows, False),       # beyond-paper: int8 KV pages
         ("open_loop", open_loop.rows, True),                # beyond-paper: Poisson arrivals
         ("mixed_longprompt", mixed_longprompt.rows, True),  # beyond-paper: chunked tail TBT
         ("shared_prefix", shared_prefix.rows, False),       # beyond-paper: prefix cache
+        ("shared_prefix_int8", shared_prefix.int8_rows, False),  # int8 hit capacity
         ("policy_sweep", policy_sweep.rows, True),          # beyond-paper: policy matrix
         ("sanitizer_overhead", sanitizer_overhead.rows, False),  # analysis layer cost
     ]
@@ -105,6 +107,32 @@ def main() -> None:
                                and r["all_complete"] for r in pr)))
             checks.append(("survival is preemption-driven (evictions occurred)",
                            all(r["n_preemptions"] > 0 for r in pr)))
+        pi = by("pressure_kv_int8")
+        if pi:
+            checks.append(("int8 KV pages at equal pool bytes buy >= 1.8x "
+                           "usable pages in every mode",
+                           all(r["page_ratio"] >= 1.8
+                               and r["pool_bytes_int8"] <= r["pool_bytes_fp"]
+                               for r in pi)))
+            checks.append(("int8 KV strictly reduces preemptions on the "
+                           "oversubscribed pool in every mode",
+                           all(r["preemptions_int8"] < r["preemptions_fp"]
+                               for r in pi)))
+            checks.append(("int8 greedy streams bit-identical across all "
+                           "serving modes under KV pressure, all requests "
+                           "complete",
+                           all(r["tokens_match"] and r["all_complete"]
+                               for r in pi)))
+        si = by("shared_prefix_int8_delta")
+        if si:
+            checks.append(("int8 pages raise prefix-cache hit capacity at "
+                           "equal pool bytes on the tight pool",
+                           all(r["cached_tokens_int8"] > r["cached_tokens_fp"]
+                               and r["hit_rate_int8"] > r["hit_rate_fp"]
+                               for r in si)))
+            checks.append(("quantized prefix cache is transparent: int8 "
+                           "cache-on streams bit-identical to cache-off",
+                           all(r["tokens_match"] for r in si)))
         ol = by("open_loop_poisson")
         if ol:
             checks.append(("open-loop Poisson run finishes every request",

@@ -114,6 +114,65 @@ def midpage_rows(*, mode=MODE, n_req=MID_N):
     return out
 
 
+# --------------------------------------------------- int8 KV tight pool ----
+TIGHT_PAGES = 13   # usable pool (12 pages) holds 2 live requests (8) +
+                   # barely 1 of the 4 distinct parked prefixes (3 each):
+                   # the fp arm reclaim-thrashes templates, int8 (~3.4x
+                   # pages at the same bytes) keeps all 4 resident
+INT8_K, INT8_N_REQ = 4, 12
+
+
+def int8_rows(*, mode=MODE, n_req=INT8_N_REQ):
+    """``shared_prefix_int8``: prefix-cache hit capacity at EQUAL pool
+    bytes.  n_req requests cycle over K=4 distinct system prompts on a
+    pool sized so the fp arm must keep reclaiming parked templates to
+    admit the next request — each template is evicted before its next
+    user arrives, so hits collapse.  ``kv_dtype="int8"`` holds ~3x the
+    pages in the same bytes: every template stays resident and the hit
+    rate roughly doubles at identical byte cost.  A third cache-off
+    int8 cell proves the quantized cache transparent: COW'd
+    codes+scales must reproduce the uncached streams exactly."""
+    model, params = model_and_params("opt-125m")
+    out, cells = [], {}
+    for kv, cache in (("fp", True), ("int8", True), ("int8", False)):
+        sc = serve_cfg(mode, n_requests=n_req,
+                       input_tokens=SYS_TOKENS + TAIL_TOKENS,
+                       output_tokens=OUTPUT, max_batch=2, n_streams=2,
+                       prefill_chunk=16)
+        sc = dataclasses.replace(sc, enable_prefix_cache=cache,
+                                 n_pages=TIGHT_PAGES, kv_dtype=kv)
+        eng = Engine(model, params, sc)
+        reqs = _requests(n_req, INT8_K, model.cfg.vocab_size)
+        s = eng.run(reqs, max_steps=20_000).summary()
+        cells[(kv, cache)] = (s, eng.alloc.n_pages - 1,
+                              [r.out_tokens for r in reqs])
+        if cache:
+            out.append(dict(
+                bench="shared_prefix_int8", x=f"{mode}/{kv}",
+                n_requests=n_req, n_done=s["n_done"],
+                all_complete=all(len(r.out_tokens) == OUTPUT for r in reqs),
+                usable_pages=eng.alloc.n_pages - 1,
+                cached_tokens=s["cached_tokens"],
+                hit_rate=round(s["cache_hit_rate"], 4),
+                n_reclaims=s["n_reclaims"],
+                n_preemptions=s["n_preemptions"],
+            ))
+    (fp, fp_pages, _) = cells[("fp", True)]
+    (i8, i8_pages, i8_toks) = cells[("int8", True)]
+    out.append(dict(
+        bench="shared_prefix_int8_delta", x=mode,
+        cached_tokens_fp=fp["cached_tokens"],
+        cached_tokens_int8=i8["cached_tokens"],
+        page_ratio=round(i8_pages / fp_pages, 3),
+        hit_rate_fp=round(fp["cache_hit_rate"], 4),
+        hit_rate_int8=round(i8["cache_hit_rate"], 4),
+        # quantized cache transparency: cache-on int8 streams must equal
+        # the cache-off int8 streams bit-for-bit (COW'd codes + scales)
+        tokens_match=i8_toks == cells[("int8", False)][2],
+    ))
+    return out
+
+
 def rows(*, n_req=N_REQ, k_sweep=K_SWEEP, mode=MODE):
     model, params = model_and_params("opt-125m")
     # warm the compile caches outside the measured cells

@@ -52,6 +52,14 @@ Invariants checked
       leaves terminal, descendant counts exact, reclaimable pool
       consistent with refcounts (a zero-ref cached page is reclaimable,
       a referenced one is not, none sit on the free list);
+    * **scale-sidecar honesty** (``ServeConfig.kv_dtype="int8"``) — the
+      engine's :class:`~repro.core.kv_cache.KVQuantSidecar` mirror holds
+      exactly one scale entry for every page with live quantized
+      contents: every committed-coverage page of every active sequence
+      and every cached trie page is registered, no entry survives a
+      page's return to the free list (or names the trash page), and the
+      device pool's bytes (codes + scale sidecars, K and V, all layers)
+      conserve against the allocator's byte-denominated sizing;
     * **scheduler budget honesty** — the pages an admission charged
       against the watermark budget bound what the request actually
       consumed from the free pool through the end of its prefill
@@ -606,12 +614,73 @@ class KVSanitizer:
                          self._engine_state()),
             events=self._events_tail())
 
+    def _check_scale_sidecar(self) -> None:
+        """``kv_dtype="int8"``: the quant sidecar mirror is honest."""
+        eng = self.eng
+        quant = eng.kv_quant
+        alloc = eng.alloc
+        cache = eng.prefix_cache
+        free = set(alloc._free)
+        for page, count in quant.entries.items():
+            if count != 1:
+                self._fail("scale_sidecar",
+                           f"page {page} holds {count} scale entries; a "
+                           "quantized page carries exactly one per "
+                           "(token, head) plane")
+            if page == alloc.trash_page:
+                self._fail("scale_sidecar",
+                           f"trash page {page} holds a scale entry; inactive "
+                           "rows scatter garbage there and nothing may read "
+                           "it back as valid quantized KV")
+            if page in free:
+                self._fail("scale_sidecar",
+                           f"page {page} sits on the free list but still "
+                           "holds a scale entry: the next owner would "
+                           "dequantize with a stale scale")
+            if page not in alloc._ref and \
+                    (cache is None or not cache.is_cached(page)):
+                self._fail("scale_sidecar",
+                           f"scale entry leaked: page {page} is neither "
+                           "live-referenced nor cached")
+        for kind, cont in (("slot", eng.slots), ("stream", eng.streams)):
+            for i, s in enumerate(cont):
+                if s is None:
+                    continue
+                committed = s.seq_len if kind == "slot" else s.pos
+                owned = alloc.owned(s.req.rid)
+                for p in owned[: alloc.pages_needed(committed)]:
+                    if p not in quant.entries:
+                        self._fail(
+                            "scale_sidecar",
+                            f"{kind}[{i}] (rid {s.req.rid}) committed page "
+                            f"{p} has no scale entry: its int8 codes cannot "
+                            "be dequantized")
+        if cache is not None:
+            for page in cache._by_page:
+                if page not in quant.entries:
+                    self._fail("scale_sidecar",
+                               f"cached trie page {page} has no scale entry: "
+                               "a future hit would remap undequantizable KV")
+        # byte conservation: device pool == allocator sizing == metrics
+        import jax  # lazy: keep the analysis layer importable without jax
+        pool = sum(x.nbytes
+                   for x in jax.tree.leaves((eng.k_pages, eng.v_pages)))
+        expect = alloc.n_pages * alloc.page_bytes
+        if pool != expect or eng.metrics.kv_pool_bytes != expect:
+            self._fail("scale_sidecar",
+                       f"pool bytes do not conserve: device arrays hold "
+                       f"{pool}, allocator sizing says {alloc.n_pages} pages "
+                       f"x {alloc.page_bytes} B = {expect}, metrics report "
+                       f"{eng.metrics.kv_pool_bytes}")
+
     def check_now(self) -> None:
         """Run the full cross-module contract against live engine state."""
         eng = self.eng
         self.n_checks += 1
         verify_state(eng.alloc, eng.prefix_cache,
                      extra=self._engine_state(), events=self._events_tail())
+        if getattr(eng, "kv_quant", None) is not None:
+            self._check_scale_sidecar()
         active: Dict[int, str] = {}
         for kind, cont in (("slot", eng.slots), ("stream", eng.streams)):
             for i, s in enumerate(cont):

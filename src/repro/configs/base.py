@@ -177,6 +177,18 @@ class ServeConfig:
     # metrics.DEFAULT_SCHED_EVENTS_CAP (configs stay import-free of core
     # at module load)
     sched_events_cap: int = 16384
+    # --- KV page dtype (kernels/kv_int8.py) ---
+    # fp:   pages in the model param dtype (seed behaviour)
+    # int8: pages as int8 codes + f32 per-(token, head) scale sidecar,
+    #       quantized at commit and dequantized inside the attention
+    #       kernel; page bytes shrink so the byte-denominated pool holds
+    #       ~2x (fp16) to 3.2x (fp32) the pages at equal pool bytes
+    kv_dtype: str = "fp"
+    # Device-byte budget for the KV page pool.  None sizes the pool as
+    # ``n_pages`` *fp-width* pages (so flipping kv_dtype="int8" alone
+    # holds pool bytes constant and grows the page count); set explicitly
+    # to pin the budget in bytes regardless of n_pages.
+    kv_pool_bytes: Optional[int] = None
     # --- shared-prefix KV cache (core/prefix_cache.py) ---
     enable_prefix_cache: bool = False   # refcounted copy-on-write page sharing
     prefix_cache_policy: str = "lru"    # legacy alias for eviction_policy
@@ -227,6 +239,16 @@ class ServeConfig:
             raise ValueError(
                 f"unknown preempt_policy {self.preempt_policy!r}; supported: "
                 f"{', '.join(sorted(PREEMPT_POLICIES))}, none")
+        if self.kv_dtype not in ("fp", "int8"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; supported: fp, int8")
+        if self.kv_pool_bytes is not None and (
+                not isinstance(self.kv_pool_bytes, int)
+                or isinstance(self.kv_pool_bytes, bool)
+                or self.kv_pool_bytes <= 0):
+            raise ValueError(
+                f"kv_pool_bytes must be a positive int or None, got "
+                f"{self.kv_pool_bytes!r}")
         if self.prefix_cache_granularity not in ("page", "token"):
             raise ValueError(
                 f"unknown prefix_cache_granularity "

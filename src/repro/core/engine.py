@@ -85,7 +85,11 @@ import numpy as np
 from repro.analysis.dispatch import DispatchSentinel
 from repro.analysis.invariants import KVSanitizer
 from repro.configs.base import ServeConfig
-from repro.core.kv_cache import PageAllocator
+from repro.kernels.kv_int8 import (fake_quant_kv, init_pages_int8,
+                                   int8_chunk_attn, int8_decode_attn,
+                                   kv_page_bytes, quant_kv)
+from repro.core.kv_cache import (KVQuantSidecar, PageAllocator,
+                                 pool_pages_from_bytes)
 from repro.core.metrics import EngineMetrics, EventRing
 from repro.core.outputs import RequestOutput, TokenEvent
 from repro.core.planner import ChunkPlan, ChunkPlanner
@@ -177,9 +181,27 @@ class Engine:
             PrefixCache(serve.page_size,
                         policy=serve.resolved_eviction_policy)
             if serve.enable_prefix_cache else None)
-        self.alloc = PageAllocator(serve.n_pages, serve.page_size,
+        # byte-denominated page pool: the budget defaults to n_pages
+        # fp-width pages, so flipping kv_dtype="int8" alone holds the pool
+        # BYTES constant and grows the page COUNT (codes + f32 scale
+        # sidecar are narrower than fp tokens) — the capacity lever.
+        dtype = jax.tree.leaves(params)[0].dtype
+        fp_page_bytes = kv_page_bytes(self.cfg, serve.page_size, dtype)
+        page_bytes = kv_page_bytes(self.cfg, serve.page_size, dtype,
+                                   kv_dtype=serve.kv_dtype)
+        budget = (serve.kv_pool_bytes if serve.kv_pool_bytes is not None
+                  else serve.n_pages * fp_page_bytes)
+        n_pages = pool_pages_from_bytes(budget, page_bytes)
+        # int8 sidecar mirror: page id -> scale-entry count (host-side
+        # shadow of which pool pages hold quantized contents)
+        self.kv_quant = (KVQuantSidecar()
+                         if serve.kv_dtype == "int8" else None)
+        self.alloc = PageAllocator(n_pages, serve.page_size,
                                    cache=self.prefix_cache,
-                                   event_cb=self._alloc_event)
+                                   event_cb=self._alloc_event,
+                                   page_bytes=page_bytes)
+        self.metrics.kv_pool_bytes = n_pages * page_bytes
+        self.metrics.kv_bytes_per_token = page_bytes / serve.page_size
         self._pages_shared_peak = 0
         # rid -> prefill tokens of admitted-but-not-yet-committed prefills;
         # cache_aware admission holds identical waiting prompts one round
@@ -191,9 +213,12 @@ class Engine:
                                      np.int32)
         self.stream_tables = np.zeros((serve.n_streams, serve.max_pages_per_seq),
                                       np.int32)
-        dtype = jax.tree.leaves(params)[0].dtype
-        self.k_pages, self.v_pages = T.init_pages(
-            self.cfg, serve.n_pages, serve.page_size, dtype=dtype)
+        if serve.kv_dtype == "int8":
+            self.k_pages, self.v_pages = init_pages_int8(
+                self.cfg, n_pages, serve.page_size)
+        else:
+            self.k_pages, self.v_pages = T.init_pages(
+                self.cfg, n_pages, serve.page_size, dtype=dtype)
         self._step_parity = 0
         self._events: List[TokenEvent] = []
         self._outputs: List[RequestOutput] = []
@@ -222,26 +247,45 @@ class Engine:
     def _build_jits(self):
         cfg = self.cfg
 
-        # full prefill returning per-row last-token logits
+        int8 = self.serve.kv_dtype == "int8"
+
+        # full prefill returning per-row last-token logits; in int8 mode
+        # attention reads fake-quantized K/V so the one-shot path is
+        # numerically identical to the chunked paths, which re-read
+        # earlier chunks from quantized pages (cross-mode bit-identity)
         def prefill_full(params, tokens, lens):
             x = T.embed(params, cfg, tokens)
             B, S, _ = x.shape
             positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
-            hidden, _, kv = T.forward_hidden(params, cfg, x, positions,
-                                             collect_kv=True)
+            hidden, _, kv = T.forward_hidden(
+                params, cfg, x, positions, collect_kv=True,
+                kv_fake_quant=fake_quant_kv if int8 else None)
             hl = hidden[jnp.arange(B), jnp.clip(lens - 1, 0, S - 1)]
             return T.unembed(params, cfg, hl), kv
+        # int8 routing: prefill-commit QUANTIZES (fp paged KV -> codes +
+        # per-(token,head) scale written side by side), decode/mixed
+        # DEQUANTIZE in-kernel via the pluggable attn fns; fp path is the
+        # seed behaviour, byte for byte.
+        attn_decode = int8_decode_attn if int8 else None
+        attn_mixed = ({"decode": int8_decode_attn, "chunk": int8_chunk_attn}
+                      if int8 else None)
 
         def commit(kpg, vpg, k_new, v_new, dest):
             # k_new [L, M, ps, KV_p, hd]; dest [M] page ids (trash for pads)
+            if int8:
+                kq, vq = quant_kv(k_new, v_new)
+                return ({"q": kpg["q"].at[:, dest].set(kq["q"]),
+                         "s": kpg["s"].at[:, dest].set(kq["s"])},
+                        {"q": vpg["q"].at[:, dest].set(vq["q"]),
+                         "s": vpg["s"].at[:, dest].set(vq["s"])})
             return kpg.at[:, dest].set(k_new), vpg.at[:, dest].set(v_new)
 
         def decode_fn(params, tokens, kpg, vpg, bt, lens, active):
             return T.decode(params, cfg, tokens, kpg, vpg, bt, lens,
-                            active=active)
+                            active=active, attn_fn=attn_decode)
 
         def mixed_fn(params, mb, kpg, vpg):
-            return T.mixed(params, cfg, mb, kpg, vpg)
+            return T.mixed(params, cfg, mb, kpg, vpg, attn_fn=attn_mixed)
 
         # prefill/commit batches legitimately vary with workload shape, so
         # the sentinel only counts them; decode/mixed/samplers are the
@@ -330,6 +374,11 @@ class Engine:
     # ------------------------------------------------------ prefix cache ---
     def _alloc_event(self, event: str, **detail):
         """Allocator trace hook (reclaim / cow) into the scheduler trace."""
+        if self.kv_quant is not None and event in ("reclaim", "page_free"):
+            # the page's quantized contents are dead: retire its scale entry
+            self.kv_quant.drop(detail["page"])
+        if event == "page_free":
+            return      # sidecar-only bookkeeping, not a scheduler decision
         if event == "reclaim" and self.prefix_cache is not None and \
                 self.prefix_cache.policy == "cost":
             self.metrics.bump("cost_evictions")
@@ -516,10 +565,22 @@ class Engine:
             return
         src = jnp.asarray([s for s, _ in pairs], jnp.int32)
         dst = jnp.asarray([d for _, d in pairs], jnp.int32)
-        self.k_pages = self.k_pages.at[:, dst].set(self.k_pages[:, src])
-        self.v_pages = self.v_pages.at[:, dst].set(self.v_pages[:, src])
+
+        def copy(a):
+            # tree-mapped: fp pools are bare [L, N, ps, KV_p, d] arrays,
+            # int8 pools are {"q": codes, "s": scales} dicts — a COW copy
+            # must move the scale sidecar WITH the codes
+            return a.at[:, dst].set(a[:, src])
+
+        self.k_pages = jax.tree.map(copy, self.k_pages)
+        self.v_pages = jax.tree.map(copy, self.v_pages)
+        if self.kv_quant is not None:
+            for s, d in pairs:
+                self.kv_quant.note_copy(s, d)
 
     def _refresh_cache_stats(self) -> None:
+        if self.kv_quant is not None:
+            self.metrics.n_quant_pages = self.kv_quant.n_quant_pages
         self._pages_shared_peak = max(self._pages_shared_peak,
                                       self.alloc.n_pages_shared)
         self.metrics.prefix_cache_stats = dict(
@@ -624,6 +685,9 @@ class Engine:
         v_new = T.kv_to_pages(v, ps)
         self.k_pages, self.v_pages = self._commit(
             self.k_pages, self.v_pages, k_new, v_new, jnp.asarray(dest))
+        if self.kv_quant is not None:
+            for r in reqs:       # before _emit_first_token may free them
+                self.kv_quant.note_write(self.alloc.owned(r.rid))
         toks = self._sample_rows(logits, reqs)
         t1 = self.now()
         for i, r in enumerate(reqs):
@@ -673,6 +737,9 @@ class Engine:
         )
         p_logits, _, (self.k_pages, self.v_pages), _ = self._mixed(
             self.params, mb, self.k_pages, self.v_pages)
+        if self.kv_quant is not None:
+            for r, _ in hits:    # hit pages were written by their donor;
+                self.kv_quant.note_write(self.alloc.owned(r.rid))  # idempotent
         toks_out = self._sample_rows(p_logits, [r for r, _ in hits])
         t1 = self.now()
         for i, (r, n) in enumerate(hits):
@@ -876,6 +943,11 @@ class Engine:
         for i, st, n in chunks:
             st.pos += n
             self.metrics.n_prefill_tokens += n
+            if self.kv_quant is not None:
+                # only pages the chunk actually covered — extend_to reserved
+                # one token past the chunk, which may be an unwritten page
+                self.kv_quant.note_write(self.alloc.owned(st.req.rid)
+                                         [: self.alloc.pages_needed(st.pos)])
             self.cache_insert(st.req, st.pos)   # register landed full pages
             if st.pos >= len(st.tokens):
                 self._emit_first_token(st.req, int(toks[i]), len(st.tokens), t)
@@ -1012,6 +1084,11 @@ class Engine:
             tok = int(toks[i])
             s.req.out_tokens.append(tok)
             s.seq_len += 1
+            if self.kv_quant is not None:
+                # the decode token's KV landed on the tail page (position
+                # seq_len-1); register before a finish can free the pages
+                tail = (s.seq_len - 1) // self.serve.page_size
+                self.kv_quant.note_write([self.alloc.owned(s.req.rid)[tail]])
             m = self.metrics.req(s.req.rid)
             m.token_times.append(t)
             m.n_generated = len(s.req.out_tokens)

@@ -30,13 +30,74 @@ class OutOfPages(Exception):
     pass
 
 
+def pool_pages_from_bytes(budget_bytes: int, page_bytes: int) -> int:
+    """Byte-denominated pool sizing: pages (incl. the reserved trash
+    page) a device-byte budget buys at ``page_bytes`` per page.  This is
+    what makes ``kv_dtype="int8"`` a capacity lever: the same budget over
+    smaller pages yields proportionally more of them.
+    """
+    if page_bytes <= 0:
+        raise ValueError(f"page_bytes must be positive, got {page_bytes}")
+    n = budget_bytes // page_bytes
+    if n < 2:
+        raise ValueError(
+            f"kv_pool_bytes={budget_bytes} buys {n} page(s) of "
+            f"{page_bytes} bytes; the pool needs >= 2 (one is the "
+            "reserved trash page) — raise the budget or shrink page_size")
+    return n
+
+
+class KVQuantSidecar:
+    """Host-side model of the int8 scale sidecar.
+
+    Every device page written with quantized KV carries exactly one scale
+    entry per (token, head) plane; this mirror tracks *which pages* hold
+    live quantized contents so the sanitizer can check the sidecar
+    invariant (``scale_sidecar``): entry count is exactly 1 for every
+    written live/cached page, no entry survives a page's return to the
+    free list, and pool bytes conserve (codes + scales = page_bytes *
+    n_pages).  Maintained by the engine at every commit/COW site and from
+    allocator ``cow`` / ``reclaim`` / ``page_free`` events.
+    """
+
+    def __init__(self) -> None:
+        self.entries: Dict[int, int] = {}   # page -> scale-entry count
+        self.n_quant_pages = 0              # cumulative fresh quantized pages
+
+    def note_write(self, pages) -> None:
+        """Pages just committed with quantized KV (idempotent: decode
+        re-writes the tail page every token without re-registering)."""
+        for p in pages:
+            if p not in self.entries:
+                self.n_quant_pages += 1
+                self.entries[p] = 1
+
+    def note_copy(self, src: int, dst: int) -> None:
+        """A COW device copy carried ``src``'s codes+scales to ``dst``."""
+        if src in self.entries:
+            if dst not in self.entries:
+                self.n_quant_pages += 1
+            self.entries[dst] = self.entries[src]
+
+    def drop(self, page: int) -> None:
+        """``page`` returned to the free list; its sidecar entry dies
+        with it (the next owner re-quantizes from scratch)."""
+        self.entries.pop(page, None)
+
+
 @dataclass
 class PageAllocator:
     n_pages: int
     page_size: int
     cache: Optional[PrefixCache] = None
-    # scheduler-trace hook: called as event_cb(event, **detail) on reclaim/cow
+    # scheduler-trace hook: called as event_cb(event, **detail) on
+    # reclaim/cow/page_free
     event_cb: Optional[Callable] = None
+    # device bytes one page costs (codes + any scale sidecar, K+V, all
+    # layers); 0 = unsized (legacy direct construction).  Set by the
+    # engine from kernels.kv_int8.kv_page_bytes so pool capacity is
+    # byte-denominated and the sanitizer can check byte conservation.
+    page_bytes: int = 0
     _free: List[int] = field(default_factory=list)
     _owned: Dict[int, List[int]] = field(default_factory=dict)  # rid -> pages
     _ref: Dict[int, int] = field(default_factory=dict)          # page -> refs
@@ -242,6 +303,9 @@ class PageAllocator:
             self._free.append(page)
             if self.cache is not None:
                 self.cache.orphaned_shared.discard(page)
+            # int8 scale-sidecar upkeep: the entry dies with the page
+            # (engine drops it; the event is NOT a scheduler-trace entry)
+            self._event("page_free", page=page)
         return True
 
     def free(self, rid: int) -> int:

@@ -122,6 +122,10 @@ class EngineMetrics:
     # packed tokens (prefill chunks + decodes) per mixed round -> rounds
     # dispatched at that packing; occupancy derives from it in summary()
     packed_tokens_hist: Dict[int, int] = field(default_factory=dict)
+    # --- KV pool byte accounting (kv_dtype="int8" capacity lever) ---
+    kv_pool_bytes: int = 0        # device bytes of the page pool (all pages)
+    kv_bytes_per_token: float = 0.0   # page_bytes / page_size (K+V, all layers)
+    n_quant_pages: int = 0        # cumulative pages written with int8 KV
 
     def req(self, rid: int) -> RequestMetrics:
         if rid not in self.requests:
@@ -178,6 +182,9 @@ class EngineMetrics:
             "sched_events_dropped": getattr(self.sched_events, "n_dropped", 0),
             "policy_counters": dict(self.policy_counters),
             "n_chunks": self.n_chunks,
+            "kv_pool_bytes": self.kv_pool_bytes,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "n_quant_pages": self.n_quant_pages,
             # mean packed tokens per mixed round over chunk_tokens; can
             # exceed 1.0 when the decode batch alone outgrows the budget
             "chunk_occupancy": (

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash_mod
 from repro.kernels import paged_attention as _paged_mod
+from repro.kernels import paged_attention_int8 as _paged_i8_mod
 
 LANE = 128
 
@@ -48,6 +49,33 @@ def paged_attention(q, k_pages, v_pages, block_table, kv_lens, q_pos, *,
         qk, kp, vp, block_table.astype(jnp.int32), kv_lens.astype(jnp.int32),
         q_pos.astype(jnp.int32), scale=scale, window=window, softcap=softcap,
         interpret=interpret)
+    o = o.transpose(0, 2, 1, 3, 4).reshape(B, Tq, H_p, d_pad)
+    return o[..., :d]
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "softcap", "interpret"))
+def paged_attention_int8(q, k_pages, k_scales, v_pages, v_scales,
+                         block_table, kv_lens, q_pos, *,
+                         scale, window=None, softcap=None, interpret=None):
+    """Model-layout ragged paged attention over int8 pages.
+
+    q [B, Tq, H_p, d] fp; code pages [N, ps, KV_p, d] int8; scale
+    sidecars [N, ps, KV_p, 1] f32.  Returns [B, Tq, H_p, d].
+    Codes pad with zeros to the 128-lane width — the padded columns
+    dequantize to exactly 0 and are sliced off after the kernel.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Tq, H_p, d = q.shape
+    KV_p = k_pages.shape[2]
+    G = H_p // KV_p
+    d_pad = ((d + LANE - 1) // LANE) * LANE
+    qk = _pad_d(q, d_pad).reshape(B, Tq, KV_p, G, d_pad).transpose(0, 2, 1, 3, 4)
+    kp = _pad_d(k_pages, d_pad)
+    vp = _pad_d(v_pages, d_pad)
+    o = _paged_i8_mod.paged_attention_int8(
+        qk, kp, k_scales, vp, v_scales, block_table.astype(jnp.int32),
+        kv_lens.astype(jnp.int32), q_pos.astype(jnp.int32), scale=scale,
+        window=window, softcap=softcap, interpret=interpret)
     o = o.transpose(0, 2, 1, 3, 4).reshape(B, Tq, H_p, d_pad)
     return o[..., :d]
 

@@ -29,41 +29,16 @@ try:
 except ImportError:                                    # newer jax
     from jax import shard_map
 
-import jax.numpy as _jnp
-from repro.models.layers import flash_attention, gather_pages, paged_attention_ref, act_fn
+from repro.models.layers import paged_attention_ref, act_fn
 from repro.models.moe import moe_apply
 from repro.models.transformer import write_kv_chunk, write_kv_token
 
-
-# ---------------------------------------------------------- int8 KV cache --
-# Beyond-paper optimization (§Perf, olmoe mixed cell): KV pages stored as
-# int8 codes + one f32 scale per (token, head); quantize at write, dequant
-# inside the flash VMEM loop. Halves decode/chunk KV HBM traffic for ~1e-3
-# relative attention-output error (tests/test_int8_kv.py).
-def q8_kv(t):
-    """t [..., hd] -> (int8 codes, f32 scale [..., 1])."""
-    scale = _jnp.max(_jnp.abs(t.astype(_jnp.float32)), axis=-1,
-                     keepdims=True) / 127.0
-    q = _jnp.round(t.astype(_jnp.float32) / _jnp.maximum(scale, 1e-20))
-    return q.astype(_jnp.int8), scale
-
-
-def paged_attention_int8(q, kpg, kps, vpg, vps, block_table, kv_lens,
-                         q_positions, *, scale, window, attn_softcap):
-    """paged_attention_ref over int8 pages (codes kpg/vpg + scales kps/vps)."""
-    B, Pmax = block_table.shape
-    ps = kpg.shape[1]
-    k = gather_pages(kpg, block_table)
-    v = gather_pages(vpg, block_table)
-    ks = gather_pages(kps, block_table)
-    vs = gather_pages(vps, block_table)
-    kv_pos = _jnp.broadcast_to(
-        _jnp.arange(Pmax * ps, dtype=_jnp.int32)[None], (B, Pmax * ps))
-    return flash_attention(
-        q, k, v, q_positions=q_positions, kv_positions=kv_pos,
-        kv_valid_len=kv_lens, scale=scale, causal=True, window=window,
-        attn_softcap=attn_softcap, block_kv=min(512, Pmax * ps),
-        k_scale=ks, v_scale=vs)
+# int8 KV machinery now lives in kernels/kv_int8.py (promoted from here);
+# re-exported so existing imports (tests/test_int8_kv.py, downstream
+# users of the spmd entry point) keep working unchanged.
+from repro.kernels.kv_int8 import (  # noqa: F401  (re-export surface)
+    int8_chunk_attn, int8_decode_attn, paged_attention_int8, q8_kv,
+)
 
 
 def _dspec(data):
@@ -93,18 +68,9 @@ def make_sharded_decode_attn(mesh, *, data=("data",), model="model",
               softcap):
         if kv_int8:
             bt_loc = bt % kpg["q"].shape[0]
-            kq, ks = q8_kv(k_new)
-            vq, vs = q8_kv(v_new)
-            kc, _ = write_kv_token(kpg["q"], vpg["q"], kq, vq, bt_loc, lens, active)
-            _, vc = write_kv_token(kpg["q"], vpg["q"], kq, vq, bt_loc, lens, active)
-            ksc, vsc = write_kv_token(kpg["s"], vpg["s"], ks, vs, bt_loc, lens, active)
-            kpg = {"q": kc, "s": ksc}
-            vpg = {"q": vc, "s": vsc}
-            o = paged_attention_int8(q, kpg["q"], kpg["s"], vpg["q"], vpg["s"],
-                                     bt_loc, lens + 1, lens[:, None],
-                                     scale=scale, window=win,
-                                     attn_softcap=softcap)
-            return o, kpg, vpg
+            return int8_decode_attn(q, k_new, v_new, kpg, vpg, bt_loc, lens,
+                                    active, scale=scale, window=win,
+                                    attn_softcap=softcap)
         bt_loc = bt % kpg.shape[0]
         kpg, vpg = write_kv_token(kpg, vpg, k_new, v_new, bt_loc, lens, active)
         o = paged_attention_ref(q, kpg, vpg, bt_loc, lens + 1, lens[:, None],
@@ -145,16 +111,9 @@ def make_sharded_chunk_attn(mesh, *, data=("data",), model="model",
         q_pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
         if kv_int8:
             bt_loc = bt % kpg["q"].shape[0]
-            kq, ks = q8_kv(k_new)
-            vq, vs = q8_kv(v_new)
-            kc, vc = write_kv_chunk(kpg["q"], vpg["q"], kq, vq, bt_loc, start, lens)
-            ksc, vsc = write_kv_chunk(kpg["s"], vpg["s"], ks, vs, bt_loc, start, lens)
-            kpg = {"q": kc, "s": ksc}
-            vpg = {"q": vc, "s": vsc}
-            o = paged_attention_int8(q, kpg["q"], kpg["s"], vpg["q"], vpg["s"],
-                                     bt_loc, start + lens, q_pos, scale=scale,
-                                     window=win, attn_softcap=softcap)
-            return o, kpg, vpg
+            return int8_chunk_attn(q, k_new, v_new, kpg, vpg, bt_loc, start,
+                                   lens, scale=scale, window=win,
+                                   attn_softcap=softcap)
         bt_loc = bt % kpg.shape[0]
         kpg, vpg = write_kv_chunk(kpg, vpg, k_new, v_new, bt_loc, start, lens)
         o = paged_attention_ref(q, kpg, vpg, bt_loc, start + lens, q_pos,

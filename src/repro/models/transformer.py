@@ -217,8 +217,15 @@ def default_moe_fn(cfg):
 
 # ------------------------------------------------------- full-seq forward --
 def _seq_block(cfg, lay, lp, window, x, positions, *, policy, moe_fn,
-               collect_kv=False):
-    """One layer on a full sequence. x [B, T, D]; positions [B, T]."""
+               collect_kv=False, kv_fake_quant=None):
+    """One layer on a full sequence. x [B, T, D]; positions [B, T].
+
+    kv_fake_quant: optional quantize-dequantize applied to K/V at the
+    ATTENTION input only (collected KV stays fp, commit re-quantizes to
+    the identical codes — q8 is idempotent).  The int8 serving path uses
+    it so monolithic prefill attends to exactly the values the chunked
+    paths re-read from quantized pages; see ``kernels/kv_int8``.
+    """
     H_p, KV_p, _, kv_map, head_mask = lay
     B, T, D = x.shape
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
@@ -227,9 +234,11 @@ def _seq_block(cfg, lay, lp, window, x, positions, *, policy, moe_fn,
     k = rope(k, positions, cfg.rope_theta)
     ke = _expand_kv(k, kv_map, policy, ("batch", "seq", "kv_heads", None))
     ve = _expand_kv(v, kv_map, policy, ("batch", "seq", "kv_heads", None))
+    ka = ke if kv_fake_quant is None else kv_fake_quant(ke)
+    va = ve if kv_fake_quant is None else kv_fake_quant(ve)
     # custom recompute-based backward (kernel-style; §Perf)
     o = flash_attention_ckpt(
-        q, ke, ve, positions, positions, None,
+        q, ka, va, positions, positions, None,
         scale=_attn_scale(cfg), causal=True, window=window,
         attn_softcap=cfg.attn_logit_softcap)
     attn_out = _o_proj(cfg, lp, o, head_mask)
@@ -249,7 +258,8 @@ def _seq_block(cfg, lay, lp, window, x, positions, *, policy, moe_fn,
 
 
 def forward_hidden(params, cfg, x, positions, *, tp=1, policy=None,
-                   moe_fn=None, remat=False, collect_kv=False):
+                   moe_fn=None, remat=False, collect_kv=False,
+                   kv_fake_quant=None):
     """Scan the layer stack. Returns (hidden [B,T,D], aux, kv or None)."""
     lay = gqa_layout(cfg.n_heads, cfg.n_kv_heads, tp)
     moe_fn = moe_fn or (default_moe_fn(cfg) if cfg.is_moe else None)
@@ -260,7 +270,8 @@ def forward_hidden(params, cfg, x, positions, *, tp=1, policy=None,
         lp, win = xs
         xc, a, kv = _seq_block(cfg, lay, lp, win, xc, positions,
                                policy=policy, moe_fn=moe_fn,
-                               collect_kv=collect_kv)
+                               collect_kv=collect_kv,
+                               kv_fake_quant=kv_fake_quant)
         return (xc, aux + a), kv
 
     if remat:
@@ -294,7 +305,7 @@ def train_logits(params, cfg, batch, **kw):
 
 # ----------------------------------------------------------------- prefill -
 def prefill(params, cfg, tokens, *, patches=None, tp=1, policy=None,
-            moe_fn=None, start_pos=0):
+            moe_fn=None, start_pos=0, kv_fake_quant=None):
     """Full-prompt prefill. tokens [B, S].
 
     Returns (last_logits [B, Vp], (k, v) each [L, B, S_tot, KV_p, hd]).
@@ -309,7 +320,8 @@ def prefill(params, cfg, tokens, *, patches=None, tp=1, policy=None,
         x = constrain(x, policy, "batch", "seq", None)
     hidden, aux, kv = forward_hidden(params, cfg, x, positions, tp=tp,
                                      policy=policy, moe_fn=moe_fn,
-                                     collect_kv=True)
+                                     collect_kv=True,
+                                     kv_fake_quant=kv_fake_quant)
     last = hidden[:, -1]
     return unembed(params, cfg, last, policy), kv
 

@@ -113,10 +113,12 @@ def test_engine_conserves_requests(data):
     model = reduced_model("qwen3-0.6b")
     mode = data.draw(st.sampled_from(
         ["sequential", "splitwiser", "splitwiser_mps"]))
+    kv_dtype = data.draw(st.sampled_from(["fp", "int8"]))
     n_req = data.draw(st.integers(1, 5))
     params = model.init(jax.random.PRNGKey(0))
     serve = ServeConfig(mode=mode, max_batch=3, page_size=4, n_pages=96,
-                        max_pages_per_seq=12, prefill_chunk=4, n_streams=2)
+                        max_pages_per_seq=12, prefill_chunk=4, n_streams=2,
+                        kv_dtype=kv_dtype)
     eng = Engine(model, params, serve)
     rng = np.random.RandomState(data.draw(st.integers(0, 100)))
     reqs = [Request(rid=i, prompt=list(rng.randint(2, 200, rng.randint(3, 12))),

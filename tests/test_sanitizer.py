@@ -284,6 +284,74 @@ def test_lossy_resume_match_detected_end_to_end(setup, monkeypatch):
     assert e.value.invariant == "preempt_resume"
 
 
+# --------------------------------------------- int8 scale sidecar ----
+SMALL_I8 = dataclasses.replace(SMALL, kv_dtype="int8")
+
+
+def _int8_engine_mid_run(setup):
+    """An int8 engine a few steps into the SMALL workload, with live
+    slots/streams whose pages carry scale entries."""
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL_I8)
+    for r in _requests(prompts):
+        eng.submit(r)
+    while not any(eng.slots) and not eng.idle():
+        eng.step()
+    return eng
+
+
+def test_int8_clean_run_under_step_sanitizer(setup):
+    model, params, prompts = setup
+    eng = Engine(model, params, SMALL_I8)
+    m = eng.run(_requests(prompts), max_steps=4000)
+    assert m.summary()["n_done"] == len(prompts)
+    assert eng.sanitizer.n_checks > 0
+    # at idle every surviving entry belongs to a parked cached page (still
+    # valid quantized contents, still serving hits); none leaked elsewhere
+    assert all(eng.prefix_cache.is_cached(p) for p in eng.kv_quant.entries)
+    assert m.summary()["n_quant_pages"] > 0
+
+
+def test_missing_scale_entry_detected(setup):
+    eng = _int8_engine_mid_run(setup)
+    slot = next(s for s in eng.slots if s is not None)
+    page = eng.alloc.owned(slot.req.rid)[0]
+    del eng.kv_quant.entries[page]          # inject: committed page lost
+    with pytest.raises(InvariantViolation) as e:  # its scale sidecar
+        eng.sanitizer.check_now()
+    assert e.value.invariant == "scale_sidecar"
+    assert "no scale entry" in str(e.value)
+
+
+def test_duplicate_scale_entry_detected(setup):
+    eng = _int8_engine_mid_run(setup)
+    page = next(iter(eng.kv_quant.entries))
+    eng.kv_quant.entries[page] = 2          # inject: double-quantized page
+    with pytest.raises(InvariantViolation) as e:
+        eng.sanitizer.check_now()
+    assert e.value.invariant == "scale_sidecar"
+    assert "exactly one" in str(e.value)
+
+
+def test_freed_page_scale_entry_detected(setup):
+    eng = _int8_engine_mid_run(setup)
+    page = eng.alloc._free[0]
+    eng.kv_quant.entries[page] = 1          # inject: entry outlived its page
+    with pytest.raises(InvariantViolation) as e:
+        eng.sanitizer.check_now()
+    assert e.value.invariant == "scale_sidecar"
+    assert "free list" in str(e.value)
+
+
+def test_pool_byte_drift_detected(setup):
+    eng = _int8_engine_mid_run(setup)
+    eng.metrics.kv_pool_bytes += 1          # inject: byte accounting drift
+    with pytest.raises(InvariantViolation) as e:
+        eng.sanitizer.check_now()
+    assert e.value.invariant == "scale_sidecar"
+    assert "conserve" in str(e.value)
+
+
 def test_step_corruption_caught_at_the_step(setup):
     """A corruption planted mid-run surfaces at the next step boundary,
     with the event-ring tail attached for post-mortem."""
