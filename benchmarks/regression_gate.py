@@ -16,12 +16,12 @@ baseline must not flip from pass to fail.
 
     # refresh the committed baseline after an intentional change:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt \
+        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt,slo_tenants \
         --json BENCH_baseline.json
 
     # what CI runs on every PR:
     PYTHONPATH=src python -m benchmarks.run --smoke \
-        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt \
+        --only shared_prefix,pressure,policy_sweep,open_loop,mixed_longprompt,slo_tenants \
         --json bench_fresh.json
     PYTHONPATH=src python -m benchmarks.regression_gate \
         BENCH_baseline.json bench_fresh.json
@@ -75,11 +75,27 @@ GATED_FIELDS = {
     "preemptions_int8": ("max", "count"),
     "cached_tokens_int8": ("min", "count"),
     "hit_rate_int8": ("min", "rate"),
+    # slo_tenants rows: counting-clock per-tenant percentiles and SLO
+    # attainment fractions are deterministic scheduling-trace functions —
+    # a policy change that lets the burst tenant head-of-line block gold
+    # again shows up as an attainment drop or a tail-percentile rise
+    "slo_attainment": ("min", "rate"),
+    "gold_attainment": ("min", "rate"),
+    "silver_attainment": ("min", "rate"),
+    "attainment_deadline": ("min", "rate"),
+    "gold_ttft_vp50": ("max", "count"),
+    "gold_ttft_vp99": ("max", "count"),
+    "gold_tbtmax_vp99": ("max", "count"),
+    "silver_ttft_vp99": ("max", "count"),
+    "gold_p99_deadline": ("max", "count"),
+    "quota_holds": ("min", "count"),
 }
 # must not flip true -> false (seed_crash rows record True: the
-# oversubscribed pool *must* crash the seed admission policy)
+# oversubscribed pool *must* crash the seed admission policy;
+# attainment/victim improvement booleans are the slo_tenants headline)
 BOOL_FIELDS = ("all_complete", "tokens_match", "seed_crash",
-               "respects_arrivals")
+               "respects_arrivals", "attainment_improved",
+               "victim_p99_improved")
 
 
 def _rows_by_key(report: dict) -> dict:

@@ -27,8 +27,8 @@ def main() -> None:
 
     from benchmarks import batching, kv_usage, mixed_longprompt, open_loop
     from benchmarks import phase_intensity, policy_sweep, pressure
-    from benchmarks import sanitizer_overhead, shared_prefix, splitwiser_hf
-    from benchmarks import splitwiser_vllm
+    from benchmarks import sanitizer_overhead, shared_prefix, slo_tenants
+    from benchmarks import splitwiser_hf, splitwiser_vllm
 
     # (name, rows_fn, accepts_smoke)
     suites = [
@@ -45,6 +45,7 @@ def main() -> None:
         ("shared_prefix_int8", shared_prefix.int8_rows, False),  # int8 hit capacity
         ("policy_sweep", policy_sweep.rows, True),          # beyond-paper: policy matrix
         ("sanitizer_overhead", sanitizer_overhead.rows, False),  # analysis layer cost
+        ("slo_tenants", slo_tenants.rows, True),            # beyond-paper: SLO deadlines
     ]
     only = args.only.split(",") if args.only else None
     all_rows = []
@@ -228,6 +229,38 @@ def main() -> None:
                            all(r["n_done"] == r["n_requests"]
                                and r["n_reclaims"] > 0
                                for r in by("policy_sweep"))))
+        sd = by("slo_tenants_det")
+        if sd:
+            checks.append(("multi-tenant SLO arms finish every request "
+                           "with timed admission honored",
+                           all(r["n_done"] == r["n_requests"]
+                               and r["respects_arrivals"] for r in sd)))
+            checks.append(("deadline scheduling stays compiled-once on the "
+                           "tenant workload (zero post-warm recompiles)",
+                           all(r["dispatch_post_warm"] == 0 for r in sd)))
+            checks.append(("per-tenant token quota engaged on the burst "
+                           "tenant under deadline admission",
+                           all(r["quota_holds"] > 0 for r in sd
+                               if "deadline" in str(r["x"]))))
+        sdd = by("slo_tenants_delta")
+        if sdd:
+            checks.append(("deadline admission+preemption strictly raises "
+                           "SLO attainment over fcfs+latest at equal load",
+                           all(r["attainment_improved"]
+                               and r["attainment_deadline"]
+                               > r["attainment_fcfs"] for r in sdd)))
+            checks.append(("deadline scheduling strictly lowers the gold "
+                           "tenant's p99 TTFT (the burst victim)",
+                           all(r["victim_p99_improved"]
+                               and r["gold_p99_deadline"]
+                               < r["gold_p99_fcfs"] for r in sdd)))
+        sid = by("slo_tenants_identity")
+        if sid:
+            checks.append(("deadline policies are ordering-only: greedy "
+                           "streams bit-identical to the fcfs oracle in "
+                           "every mode when no deadline binds",
+                           all(r["tokens_match"] and r["all_complete"]
+                               for r in sid)))
         so = by("sanitizer_overhead_delta")
         if so:
             checks.append(("sanitizer is read-only: greedy token streams "

@@ -72,7 +72,12 @@ Invariants checked
       :class:`~repro.core.planner.ChunkPlan` packs all runnable decode
       tokens, never carves a stream past its remaining prefill or the
       budget the decodes leave, and is work-conserving
-      (:func:`~repro.core.planner.validate_plan`).
+      (:func:`~repro.core.planner.validate_plan`);
+    * **tenant-quota honesty** (``admission_policy="deadline"`` with
+      quota'd ``ServeConfig.tenants``) — every quota'd tenant's active
+      in-flight footprint (prompt + full generation grant per request,
+      ``core/slo.py``) stays within its ``quota_tokens``, except for
+      the documented single-oversized-request progress case.
 
 On failure a structured :class:`InvariantViolation` is raised carrying
 the violated invariant's name, an allocator/trie/scheduler state dump,
@@ -723,3 +728,39 @@ class KVSanitizer:
                 self._fail("request_identity",
                            f"request {r.rid} queued twice")
             seen_waiting.add(r.rid)
+        if eng.serve.admission_policy == "deadline" and any(
+                t.quota_tokens is not None for t in eng.serve.tenants):
+            self._check_tenant_quota()
+
+    def _check_tenant_quota(self) -> None:
+        """``admission_policy="deadline"`` + quota'd tiers: admission's
+        quota promise holds against live engine state — each quota'd
+        tenant's active footprint (prompt + full generation grant per
+        request, ``core/slo.py``) stays within ``quota_tokens``, except
+        for the documented single-oversized case (one request bigger
+        than its tenant's whole quota admits on an idle tenant; the
+        ``holds`` progress rule, so quotas bound concurrency without
+        wedging a tenant)."""
+        from repro.core.slo import request_footprint
+        eng = self.eng
+        held: Dict[str, list] = {}
+        seen = set()
+        for cont in (eng.slots, eng.streams):
+            for s in cont:
+                if s is None or s.req.rid in seen:
+                    continue
+                seen.add(s.req.rid)
+                held.setdefault(eng.effective_slo(s.req).tenant, []).append(
+                    request_footprint(s.req))
+        for tier in eng.serve.tenants:
+            if tier.quota_tokens is None:
+                continue
+            fps = held.get(tier.name, [])
+            if sum(fps) > tier.quota_tokens and len(fps) > 1:
+                self._fail(
+                    "tenant_quota",
+                    f"tenant {tier.name!r} holds {sum(fps)} in-flight "
+                    f"footprint tokens across {len(fps)} requests, over its "
+                    f"quota of {tier.quota_tokens}: deadline admission must "
+                    "queue the burst behind the quota (only a single "
+                    "oversized request may exceed it)")

@@ -51,6 +51,14 @@ RPR008 pallas-no-contract
     fails as an opaque Mosaic/XLA error deep in lowering.  Every Pallas
     wrapper must validate its operand shapes/dtypes at entry.  Scoped to
     ``kernels/``.
+RPR009 params-unvalidated
+    RPR003 generalized to the per-request/-tenant parameter dataclasses:
+    every ``SamplingParams`` / ``SLOParams`` / ``TenantTier`` field must
+    be mentioned by ``__post_init__`` (same ``self.<field>`` /
+    registry-loop string-literal detection).  These objects ride every
+    request into the engine's hot paths, where a bad knob surfaces as a
+    wrong token or an opaque trace error instead of a config-time
+    ValueError.
 
 Run as ``python -m repro.analysis.lint src/ tests/ benchmarks/``
 (non-zero exit on findings).  ``--select``/``--ignore`` take
@@ -221,9 +229,26 @@ class ServeConfigValidated(Rule):
             if name not in mentioned:
                 yield Finding(
                     "", line, self.code,
-                    f"ServeConfig.{name} is never validated in "
+                    f"{cls.name}.{name} is never validated in "
                     "__post_init__: a bad value should die at construction "
                     "with a clear message, not deep inside the engine")
+
+
+class ParamsValidated(ServeConfigValidated):
+    """RPR009: RPR003's contract generalized to the per-request/-tenant
+    parameter dataclasses (``SamplingParams``, ``SLOParams``,
+    ``TenantTier``) — a field added to any of them without a validation
+    mention in ``__post_init__`` ships an unvalidated knob straight into
+    the engine's hot paths."""
+
+    code = "RPR009"
+    name = "params-unvalidated"
+    classes = ("SamplingParams", "SLOParams", "TenantTier")
+
+    def check(self, tree: ast.Module, path: str) -> Iterator[Finding]:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name in self.classes:
+                yield from self._check_class(node)
 
 
 class JnpInLoop(Rule):
@@ -448,7 +473,8 @@ class PallasContract(Rule):
 RULES: Sequence[Rule] = (MutableDefault(), BareAssert(),
                          ServeConfigValidated(), JnpInLoop(),
                          MetricsSurfaced(), JitInHotPath(),
-                         HostSyncInLoop(), PallasContract())
+                         HostSyncInLoop(), PallasContract(),
+                         ParamsValidated())
 
 
 def _iter_files(paths: Sequence[str]) -> Iterator[Path]:

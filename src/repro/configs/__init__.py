@@ -1,2 +1,3 @@
-from repro.configs.base import SERVE_MODES, ModelConfig, ServeConfig, TrainConfig
+from repro.configs.base import (SERVE_MODES, ModelConfig, ServeConfig,
+                                TenantTier, TrainConfig)
 from repro.configs.registry import ARCHS, get_config, list_archs

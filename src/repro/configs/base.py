@@ -130,6 +130,51 @@ SERVE_MODES = ("sequential", "splitwiser", "splitwiser_mps", "chunked")
 
 
 @dataclass(frozen=True)
+class TenantTier:
+    """Per-tenant SLO tier (``ServeConfig.tenants``).
+
+    Requests name a tenant via ``SLOParams.tenant`` (core/slo.py); the
+    matching tier supplies default TTFT/TBT deadlines (per-request
+    values override), an in-flight token quota the ``deadline``
+    admission policy enforces (a tenant's burst queues behind its quota
+    instead of starving other tenants), and a weight the chunked-mode
+    planner's carve order scales urgency by (higher weight = served
+    earlier at equal slack).  Targets are engine-clock seconds (virtual
+    seconds under the counting-clock harnesses).
+    """
+    name: str
+    ttft_target: Optional[float] = None
+    tbt_target: Optional[float] = None
+    quota_tokens: Optional[int] = None   # max in-flight prompt+budget tokens
+    weight: float = 1.0                  # planner carve-order weight
+
+    def __post_init__(self):
+        if not isinstance(self.name, str) or not self.name:
+            raise ValueError(
+                f"tier name must be a non-empty string, got {self.name!r}")
+        for knob in ("ttft_target", "tbt_target"):
+            value = getattr(self, knob)
+            if value is not None and (
+                    not isinstance(value, (int, float))
+                    or isinstance(value, bool) or value <= 0):
+                raise ValueError(
+                    f"tier {self.name!r}: {knob} must be a positive number "
+                    f"or None, got {value!r}")
+        if self.quota_tokens is not None and (
+                not isinstance(self.quota_tokens, int)
+                or isinstance(self.quota_tokens, bool)
+                or self.quota_tokens <= 0):
+            raise ValueError(
+                f"tier {self.name!r}: quota_tokens must be a positive int "
+                f"or None, got {self.quota_tokens!r}")
+        if not isinstance(self.weight, (int, float)) \
+                or isinstance(self.weight, bool) or self.weight <= 0:
+            raise ValueError(
+                f"tier {self.name!r}: weight must be a positive number, "
+                f"got {self.weight!r}")
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """Serving-engine (Splitwiser) configuration.
 
@@ -215,6 +260,17 @@ class ServeConfig:
     dispatch_sentinel: bool = field(
         default_factory=lambda: os.environ.get(
             "REPRO_DISPATCH_SENTINEL", "") not in ("", "0", "false", "off"))
+    # --- multi-tenant SLO tiers (core/slo.py, core/policies.py) ---
+    # Tuple of TenantTier: per-tenant default TTFT/TBT deadlines,
+    # in-flight token quotas (enforced by admission_policy="deadline"),
+    # and planner carve-order weights.  Empty = single implicit
+    # "default" tenant with no deadlines (seed behaviour).
+    tenants: Tuple[TenantTier, ...] = ()
+    # deadline-admission completion predictor: engine-clock seconds of
+    # predicted delay charged per page the admission would allocate
+    # (slack = deadline - now - slo_page_cost * admission_pages).  0
+    # ranks by raw deadline (pure EDF).
+    slo_page_cost: float = 0.0
 
     def __post_init__(self):
         if self.mode not in SERVE_MODES:
@@ -287,6 +343,19 @@ class ServeConfig:
             value = getattr(self, knob)
             if not isinstance(value, bool):
                 raise ValueError(f"{knob} must be a bool, got {value!r}")
+        if not isinstance(self.tenants, tuple) or any(
+                not isinstance(t, TenantTier) for t in self.tenants):
+            raise ValueError(
+                f"tenants must be a tuple of TenantTier, got {self.tenants!r}")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant tier names: {names}")
+        if not isinstance(self.slo_page_cost, (int, float)) \
+                or isinstance(self.slo_page_cost, bool) \
+                or self.slo_page_cost < 0:
+            raise ValueError(
+                f"slo_page_cost must be a number >= 0, got "
+                f"{self.slo_page_cost!r}")
         from repro.analysis.invariants import SANITIZE_LEVELS
         if self.sanitize_level not in SANITIZE_LEVELS:
             raise ValueError(

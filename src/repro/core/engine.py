@@ -96,6 +96,7 @@ from repro.core.planner import ChunkPlan, ChunkPlanner
 from repro.core.prefix_cache import PrefixCache
 from repro.core.sampler import SamplingParams, greedy_tokens, sample_tokens
 from repro.core.scheduler import Scheduler
+from repro.core.slo import EffectiveSLO, SLOParams, resolve_slo, slo_outcome
 from repro.models import transformer as T
 
 
@@ -114,6 +115,10 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     arrival: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
+    # per-request SLO: TTFT/TBT deadlines + tenant id (core/slo.py);
+    # unset targets inherit the tenant's ServeConfig tier.  default_factory
+    # for the same aliasing reason as ``sampling``
+    slo: SLOParams = field(default_factory=SLOParams)
 
     @property
     def max_new_tokens(self) -> int:
@@ -207,6 +212,12 @@ class Engine:
         # cache_aware admission holds identical waiting prompts one round
         # so they hit the pages these are about to insert
         self._inflight: dict = {}
+        # multi-tenant SLO tiers (ServeConfig.tenants) + per-rid resolved
+        # EffectiveSLO cache: the deadline policies, chunk planner and
+        # quota checks all read effective_slo() on hot paths, and the
+        # resolution is pure per request
+        self.tiers = {t.name: t for t in serve.tenants}
+        self._slo_cache: dict = {}
         self.streams: List[Optional[_Stream]] = [None] * serve.n_streams
         self.slots: List[Optional[_Slot]] = [None] * serve.max_batch
         self.block_tables = np.zeros((serve.max_batch, serve.max_pages_per_seq),
@@ -320,6 +331,10 @@ class Engine:
         m = self.metrics.req(req.rid)
         m.arrival = req.arrival
         m.n_prompt = len(req.prompt)
+        eff = self.effective_slo(req)   # clock-free (pure resolution)
+        m.tenant = eff.tenant
+        m.ttft_target = eff.ttft_target
+        m.tbt_target = eff.tbt_target
 
     def run(self, requests: List[Request], max_steps: int = 100_000, *,
             open_loop: bool = False) -> EngineMetrics:
@@ -400,6 +415,15 @@ class Engine:
 
     def unregister_inflight(self, rid: int) -> None:
         self._inflight.pop(rid, None)
+
+    def effective_slo(self, req: Request) -> EffectiveSLO:
+        """``req``'s tier-resolved SLO (core/slo.py), cached per rid —
+        the single answer the deadline policies, tenant quotas, chunk
+        planner and SLO metrics all read.  Pure: no clock access."""
+        eff = self._slo_cache.get(req.rid)
+        if eff is None:
+            eff = self._slo_cache[req.rid] = resolve_slo(req.slo, self.tiers)
+        return eff
 
     def inflight_hit_pages(self, req: Request) -> int:
         """Best full-page prefix coverage of ``req``'s prefill that some
@@ -790,6 +814,15 @@ class Engine:
         m.t_done = t
         m.n_generated = len(req.out_tokens)
         m.finish_reason = reason
+        # settle the SLO verdict: TTFT against the target, TBT against
+        # the WORST inter-token gap; None (no deadline resolved) stays
+        # out of the attainment fractions
+        eff = self.effective_slo(req)
+        m.slo_ok = slo_outcome(m.ttft, m.tbt_max, eff)
+        if m.slo_ok is True:
+            self.metrics.slo_attained += 1
+        elif m.slo_ok is False:
+            self.metrics.slo_missed += 1
         # register committed KV before freeing: the pages park on the
         # cache's reclaimable list and keep serving identical prefixes
         # (final: the partial tail page is reusable too)
@@ -799,7 +832,8 @@ class Engine:
             rid=req.rid, prompt=list(req.prompt), tokens=list(req.out_tokens),
             finish_reason=reason, n_preempted=m.n_preempted,
             n_cached_tokens=m.n_cached_tokens,
-            arrival=m.arrival, token_times=list(m.token_times), t_done=t))
+            arrival=m.arrival, token_times=list(m.token_times), t_done=t,
+            tenant=eff.tenant, slo_attained=m.slo_ok))
 
     def _record_event(self, req: Request, tok: int, t, reason: Optional[str]):
         self._events.append(TokenEvent(
@@ -1059,7 +1093,8 @@ class Engine:
         n_decode = sum(s is not None for s in self.slots)
         remaining = [0 if st is None else max(len(st.tokens) - st.pos, 0)
                      for st in self.streams]
-        plan = self.planner.plan(remaining, n_decode)
+        plan = self.planner.plan(remaining, n_decode,
+                                 self._stream_priorities())
         if self.sanitizer is not None:
             self.sanitizer.note_plan(plan, remaining, n_decode)
         composed = self._compose_prefill(plan)
@@ -1071,6 +1106,29 @@ class Engine:
         hist = self.metrics.packed_tokens_hist
         hist[packed] = hist.get(packed, 0) + 1
         return "mixed"
+
+    def _stream_priorities(self) -> Optional[List[Optional[float]]]:
+        """Per-stream carve urgencies for the chunk planner: tenant-
+        weighted TTFT slack, ascending = more urgent (core/slo.py).
+        None when no in-flight prefill carries a TTFT deadline — the
+        deadline-free path stays byte-identical (cursor round-robin, no
+        clock read; one ``now()`` read per round otherwise).  Weight
+        scaling is sign-aware so a heavier tenant is *always* more
+        urgent at equal raw slack: positive slack shrinks by the weight,
+        overdue (negative) slack grows by it."""
+        effs = [None if st is None else self.effective_slo(st.req)
+                for st in self.streams]
+        if not any(e is not None and e.ttft_target is not None for e in effs):
+            return None
+        t_now = self.now()
+        out: List[Optional[float]] = []
+        for st, e in zip(self.streams, effs):
+            if e is None or e.ttft_target is None:
+                out.append(None)
+                continue
+            slack = (st.req.arrival or 0.0) + e.ttft_target - t_now
+            out.append(slack / e.weight if slack >= 0 else slack * e.weight)
+        return out
 
     def _advance_decode(self, d_logits, d_active, t):
         rows = [s.req if (s is not None and d_active[i]) else None

@@ -71,6 +71,12 @@ class RequestMetrics:
     n_cached_tokens: int = 0     # prefill tokens served from the prefix cache
                                  # (summed across preemption resumes)
     finish_reason: Optional[str] = None   # "length" | "stop" once done
+    # --- SLO accounting (core/slo.py; stamped at submit / settled at
+    # finish by the engine) ---
+    tenant: str = "default"
+    ttft_target: Optional[float] = None   # effective (tier-resolved) targets
+    tbt_target: Optional[float] = None
+    slo_ok: Optional[bool] = None   # attained? None = carries no deadline
 
     @property
     def ttft(self) -> Optional[float]:
@@ -87,6 +93,16 @@ class RequestMetrics:
         gaps = [b - a for a, b in zip(self.token_times, self.token_times[1:],
                                       strict=False)]
         return sum(gaps) / len(gaps)
+
+    @property
+    def tbt_max(self) -> Optional[float]:
+        """Worst inter-token gap — what a TBT *deadline* is judged
+        against (the mean ``tbt`` hides exactly the stall an SLO exists
+        to catch)."""
+        if len(self.token_times) < 2:
+            return None
+        return max(b - a for a, b in zip(self.token_times,
+                                         self.token_times[1:], strict=False))
 
 
 @dataclass
@@ -126,6 +142,9 @@ class EngineMetrics:
     kv_pool_bytes: int = 0        # device bytes of the page pool (all pages)
     kv_bytes_per_token: float = 0.0   # page_bytes / page_size (K+V, all layers)
     n_quant_pages: int = 0        # cumulative pages written with int8 KV
+    # --- SLO outcomes (finished requests carrying a deadline only) ---
+    slo_attained: int = 0
+    slo_missed: int = 0
 
     def req(self, rid: int) -> RequestMetrics:
         if rid not in self.requests:
@@ -193,4 +212,48 @@ class EngineMetrics:
                    * max(sum(self.packed_tokens_hist.values()), 1))
                 if self.chunk_budget else None),
             "packed_tokens_hist": dict(sorted(self.packed_tokens_hist.items())),
+            # SLO outcomes: only requests carrying a deadline count, so
+            # attainment is None (not a vacuous 1.0) on deadline-free runs
+            "slo_attained": self.slo_attained,
+            "slo_missed": self.slo_missed,
+            "slo_attainment": (
+                self.slo_attained / (self.slo_attained + self.slo_missed)
+                if self.slo_attained + self.slo_missed else None),
+            "tenants": self._tenant_rollup(done),
         }
+
+    def _tenant_rollup(self, done) -> dict:
+        """Per-tenant latency/SLO aggregates over finished requests.
+        Omitted entirely (empty dict) when every request rode the
+        implicit deadline-free "default" tenant, so single-tenant
+        summaries stay byte-stable."""
+        by_tenant: Dict[str, list] = {}
+        for r in done:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        if list(by_tenant) == ["default"] and all(
+                r.slo_ok is None for r in done):
+            return {}
+        out = {}
+        for tenant in sorted(by_tenant):
+            rs = by_tenant[tenant]
+            judged = [r for r in rs if r.slo_ok is not None]
+            ttfts = sorted(r.ttft for r in rs if r.ttft is not None)
+            gaps = sorted(r.tbt_max for r in rs if r.tbt_max is not None)
+            def pct(vals, q):
+                if not vals:
+                    return None
+                return vals[min(int(q * (len(vals) - 1) + 0.5),
+                                len(vals) - 1)]
+            out[tenant] = {
+                "n_done": len(rs),
+                "slo_attained": sum(1 for r in judged if r.slo_ok),
+                "slo_missed": sum(1 for r in judged if not r.slo_ok),
+                "slo_attainment": (
+                    sum(1 for r in judged if r.slo_ok) / len(judged)
+                    if judged else None),
+                "ttft_p50": pct(ttfts, 0.50),
+                "ttft_p99": pct(ttfts, 0.99),
+                "tbt_max_p50": pct(gaps, 0.50),
+                "tbt_max_p99": pct(gaps, 0.99),
+            }
+        return out

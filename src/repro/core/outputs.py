@@ -35,6 +35,10 @@ class RequestOutput:
     arrival: float
     token_times: List[float] = field(default_factory=list)
     t_done: float = 0.0
+    tenant: str = "default"       # SLOParams.tenant (core/slo.py)
+    # SLO verdict settled at finish: True/False for deadline-carrying
+    # requests, None when no TTFT/TBT target resolved for it
+    slo_attained: Optional[bool] = None
 
     @property
     def ttft(self) -> Optional[float]:

@@ -14,7 +14,11 @@ The planner is pure bookkeeping: it decides *how many* tokens each
 stream contributes this round; the engine keeps page budgeting,
 cache fast-forwarding and dispatch.  Streams are served round-robin
 from a rotating cursor so a long prompt on stream 0 cannot
-permanently crowd out stream 1 when the budget is tight.
+permanently crowd out stream 1 when the budget is tight; when the
+engine passes per-stream deadline ``priorities`` (tenant-weighted TTFT
+slack, ``core/slo.py``), the carve runs most-urgent-first instead, so
+a deadline-critical prefill is never the one left holding the bag on a
+tight round.
 
 :func:`validate_plan` makes the packing contract executable; the runtime
 sanitizer (``analysis/invariants.py``, ``KVSanitizer.note_plan``) runs it
@@ -23,7 +27,7 @@ against every live plan at any ``sanitize_level`` above ``off``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -73,8 +77,9 @@ class ChunkPlanner:
         self._cursor = 0     # round-robin start stream (fairness under
                              # a budget too small for every stream)
 
-    def plan(self, remaining: Sequence[int],
-             n_decode_tokens: int) -> ChunkPlan:
+    def plan(self, remaining: Sequence[int], n_decode_tokens: int,
+             priorities: Optional[Sequence[Optional[float]]] = None
+             ) -> ChunkPlan:
         """Pack one round: ``remaining[i]`` prefill tokens left on stream
         ``i`` (0 when empty), ``n_decode_tokens`` runnable decodes.
 
@@ -82,6 +87,18 @@ class ChunkPlanner:
         greedily over the streams starting at the rotating cursor.  The
         carve is work-conserving: budget only goes unused when no stream
         has tokens left to take it.
+
+        ``priorities`` makes the carve order deadline/weight-aware
+        (``core/slo.py``): when any entry is non-None, streams are
+        carved most-urgent first — ascending by priority value
+        (weighted TTFT slack as computed by the engine), ``None``
+        entries (no deadline) last in stream order — instead of from
+        the rotating cursor.  The cursor still advances so dropping
+        back to the deadline-free path (all-None rounds) keeps its
+        round-robin fairness exactly where it would have been.  Only
+        the carve *order* changes; :func:`validate_plan`'s packing
+        contract (totals, caps, work conservation) is order-blind, so
+        urgency-ordered plans satisfy the same invariant.
         """
         if len(remaining) != self.n_streams:
             raise ValueError(
@@ -90,12 +107,24 @@ class ChunkPlanner:
         if n_decode_tokens < 0:
             raise ValueError(
                 f"n_decode_tokens must be >= 0, got {n_decode_tokens}")
+        if priorities is not None and len(priorities) != self.n_streams:
+            raise ValueError(
+                f"plan() got {len(priorities)} stream priorities for "
+                f"{self.n_streams} streams")
+        if priorities is not None and any(p is not None for p in priorities):
+            carve = sorted(range(self.n_streams),
+                           key=lambda i: (priorities[i] is None,
+                                          priorities[i]
+                                          if priorities[i] is not None
+                                          else 0.0, i))
+        else:
+            carve = [(self._cursor + k) % self.n_streams
+                     for k in range(self.n_streams)]
         lens = [0] * self.n_streams
         left = max(self.chunk_tokens - n_decode_tokens, 0)
-        for k in range(self.n_streams):
+        for i in carve:
             if left <= 0:
                 break
-            i = (self._cursor + k) % self.n_streams
             take = min(max(remaining[i], 0), left)
             lens[i] = take
             left -= take

@@ -29,6 +29,37 @@ Admission (:class:`AdmissionPolicy` — ``serve.admission_policy``)
                     ``serve.admission_age_weight`` to its score, bounding
                     the worst-case wait of a cold-prefix request under a
                     hot-template stream (no starvation).
+    ``deadline``    earliest-deadline-first by TTFT *slack*: deadline
+                    (``arrival + ttft_target``, resolved through the
+                    request's tenant tier — ``core/slo.py``) minus the
+                    current clock minus a predicted completion cost
+                    (``serve.slo_page_cost`` per page the admission
+                    would allocate, via the round-memoized
+                    ``Scheduler.probe``/``admission_pages`` predictor).
+                    Requests with no deadline carry infinite slack and
+                    sort FCFS among themselves *after* every
+                    deadline-bearing request; a queue with no deadlines
+                    at all degenerates to exact FCFS with zero clock
+                    reads.  ``holds`` enforces per-tenant in-flight
+                    token quotas (``TenantTier.quota_tokens``): a
+                    tenant at quota has its next request skipped for
+                    the round — the burst queues behind its own quota
+                    instead of starving other tenants — except that a
+                    single over-quota request on an otherwise idle
+                    tenant is admitted (progress guarantee: quotas
+                    bound concurrency, they never wedge a tenant).
+
+Preemption gains the matching arm:
+    ``deadline``    maximum-slack victim: the binding deadline is TTFT
+                    while no token has been emitted, then TBT from the
+                    last emitted token; the candidate with the most
+                    slack (no-deadline candidates rank as infinite, so
+                    they are preempted first) is evicted, tie-broken by
+                    the ``cache_aware`` resume-safe fraction and then
+                    latest arrival — a deadline-critical request is
+                    never evicted while a slack-rich one runs, and with
+                    no deadlines anywhere the choice is bit-identical
+                    to ``cache_aware``.
 
 Eviction (:class:`EvictionPolicy` — ``serve.eviction_policy``)
     Ranks the prefix cache's reclaimable zero-ref *leaf* pages; the
@@ -60,7 +91,10 @@ validates against them so a typo fails at config time, not mid-serve.
 """
 from __future__ import annotations
 
+import math
 from typing import List, Optional, Tuple
+
+from repro.core.slo import request_footprint
 
 
 # --------------------------------------------------------------- admission --
@@ -133,6 +167,69 @@ class CacheAwareAdmission(AdmissionPolicy):
         # the trie probe is round-memoized
         if sched.eng.inflight_hit_pages(req) > sched.probe(req)[0]:
             sched.metrics.bump("admission_holds")
+            return True
+        return False
+
+
+class DeadlineAdmission(AdmissionPolicy):
+    """Slack-ranked (EDF) admission with per-tenant token quotas.
+
+    ``order``: each waiting request's TTFT slack is its deadline
+    (``arrival + ttft_target``, tier-resolved) minus the clock, minus
+    ``serve.slo_page_cost`` engine-seconds per page the admission would
+    allocate (the same ``probe``/``admission_pages`` arithmetic the
+    watermark budget uses, round-memoized, so ranking adds no extra trie
+    walks).  Least slack first; infinite-slack (deadline-free) requests
+    keep FCFS order among themselves at the back.  The clock is read at
+    most once per round, and not at all when no waiting request carries
+    a TTFT deadline — a deadline-free queue is byte-for-byte FCFS, which
+    is what makes the no-deadline bit-identity guarantee hold trivially.
+
+    ``holds``: a request whose tenant already holds ``quota_tokens`` or
+    more in-flight footprint tokens (prompt + full ``max_new_tokens``
+    grant, across slots, streams, and this round's earlier admits) is
+    skipped for the round.  The check is ``inflight > 0 and inflight +
+    footprint > quota``: an oversized request on an idle tenant still
+    admits, so a quota can bound a tenant's concurrency but never wedge
+    it, and a held burst drains as its own requests finish (no
+    cross-tenant dependency, no deadlock).
+    """
+
+    name = "deadline"
+
+    def order(self, sched) -> List:
+        eng = sched.eng
+        effs = [(r, eng.effective_slo(r)) for r in sched.waiting]
+        if all(eff.ttft_target is None for _, eff in effs):
+            return list(sched.waiting)
+        t_now = eng.now()
+        cost = sched.serve.slo_page_cost
+        ranked = []
+        for r, eff in effs:
+            if eff.ttft_target is None:
+                slack = math.inf
+            else:
+                slack = (r.arrival or 0.0) + eff.ttft_target - t_now
+                if cost:
+                    n_hit, n_free_hit, cow_extra = sched.probe(r)
+                    slack -= cost * sched.admission_pages(
+                        r, free_cached=n_free_hit, cow_extra=cow_extra,
+                        n_hit=n_hit)
+            ranked.append((slack, r.arrival, r.rid, r))
+        ranked.sort(key=lambda t: t[:3])
+        out = [t[3] for t in ranked]
+        if [r.rid for r in out] != [r.rid for r in sched.waiting]:
+            sched.metrics.bump("admission_reorders")
+        return out
+
+    def holds(self, sched, req) -> bool:
+        eff = sched.eng.effective_slo(req)
+        if eff.quota_tokens is None:
+            return False
+        inflight = sched.tenant_inflight_tokens(eff.tenant)
+        if inflight > 0 and \
+                inflight + request_footprint(req) > eff.quota_tokens:
+            sched.metrics.bump("quota_holds")
             return True
         return False
 
@@ -229,13 +326,64 @@ class CacheAwarePreempt(PreemptPolicy):
         return best
 
 
+class DeadlinePreempt(PreemptPolicy):
+    """Maximum-slack victim: never evict a deadline-critical request
+    while a slack-rich one runs.
+
+    Each candidate's binding deadline is TTFT (``arrival +
+    ttft_target``) while it has emitted no token, then TBT
+    (``last token time + tbt_target``) — both tier-resolved; a request
+    with no applicable target has infinite slack and is preferred as a
+    victim.  Ties (notably the all-infinite no-deadline case) fall back
+    to the ``cache_aware`` resume-safe fraction and then latest
+    ``(arrival, rid)``, so with no deadlines anywhere the selection is
+    bit-identical to ``cache_aware`` (and to ``latest`` on a cold
+    cache).  The clock is read once, and only when some candidate
+    actually carries a deadline.  Bumps ``deadline_spared_preemptions``
+    when a tighter-slack candidate was passed over in favour of the
+    chosen victim (the counter that proves the policy changed an
+    outcome).
+    """
+
+    name = "deadline"
+
+    def select(self, candidates, eng):
+        if not candidates:
+            return None
+        effs = [eng.effective_slo(req) for _, _, req, _ in candidates]
+        t_now = eng.now() if any(e.has_deadline for e in effs) else 0.0
+        best, best_key, min_slack = None, None, math.inf
+        for (kind, i, req, committed), eff in zip(candidates, effs):
+            m = eng.metrics.req(req.rid)
+            if m.t_first_token is None:
+                deadline = ((req.arrival or 0.0) + eff.ttft_target
+                            if eff.ttft_target is not None else math.inf)
+            else:
+                last = m.token_times[-1] if m.token_times \
+                    else m.t_first_token
+                deadline = (last + eff.tbt_target
+                            if eff.tbt_target is not None else math.inf)
+            slack = deadline - t_now
+            min_slack = min(min_slack, slack)
+            n_safe = eng.resume_safe_pages(req, committed)
+            frac = n_safe / max(eng.alloc.pages_needed(committed), 1)
+            key = (slack, frac, req.arrival, req.rid)
+            if best_key is None or key > best_key:
+                best, best_key = (kind, i), key
+        if best_key is not None and min_slack < best_key[0]:
+            eng.metrics.bump("deadline_spared_preemptions")
+        return best
+
+
 # -------------------------------------------------------------- registries --
-ADMISSION_POLICIES = {p.name: p for p in (FCFSAdmission, CacheAwareAdmission)}
+ADMISSION_POLICIES = {p.name: p for p in (FCFSAdmission, CacheAwareAdmission,
+                                          DeadlineAdmission)}
 EVICTION_POLICIES = {p.name: p for p in (LRUEviction, FIFOEviction,
                                          CostEviction)}
 # "none" disables preemption entirely (seed arm); it is a valid config
 # value but has no policy object — the scheduler short-circuits it.
-PREEMPT_POLICIES = {p.name: p for p in (LatestPreempt, CacheAwarePreempt)}
+PREEMPT_POLICIES = {p.name: p for p in (LatestPreempt, CacheAwarePreempt,
+                                        DeadlinePreempt)}
 
 
 def _make(registry, kind: str, name: str):

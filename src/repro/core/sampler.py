@@ -50,6 +50,23 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.eos_id is not None and (
+                not isinstance(self.eos_id, int)
+                or isinstance(self.eos_id, bool) or self.eos_id < 0):
+            raise ValueError(
+                f"eos_id must be a non-negative int or None, got "
+                f"{self.eos_id!r}")
+        if not isinstance(self.stop_token_ids, tuple) or any(
+                not isinstance(t, int) or isinstance(t, bool) or t < 0
+                for t in self.stop_token_ids):
+            raise ValueError(
+                f"stop_token_ids must be a tuple of non-negative ints, got "
+                f"{self.stop_token_ids!r}")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
+                or self.seed < 0:
+            raise ValueError(
+                f"seed must be a non-negative int (PRNGKey seed), got "
+                f"{self.seed!r}")
 
     @property
     def stop_set(self) -> frozenset:

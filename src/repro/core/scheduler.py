@@ -59,6 +59,7 @@ from typing import Deque, List, Optional, Tuple
 
 from repro.core.kv_cache import OutOfPages
 from repro.core.policies import make_admission, make_preempt
+from repro.core.slo import request_footprint
 
 
 class Scheduler:
@@ -83,6 +84,11 @@ class Scheduler:
         # cache_aware aging (serve.admission_age_weight) so a cold-prefix
         # request cannot starve behind a hot-template stream
         self._wait_rounds: dict = {}
+        # requests admitted earlier in the CURRENT round: not yet placed
+        # in slots/streams by the engine, but already holding quota —
+        # tenant_inflight_tokens must see them or a burst could blow
+        # through its tenant quota within a single round
+        self._round_admits: List = []
 
     def probe(self, req) -> Tuple[int, int, int]:
         """``Engine.cache_probe`` memoized for the current admission
@@ -99,6 +105,29 @@ class Scheduler:
         (reset on admission) — the age signal policies weight against
         resident-prefix advantage."""
         return self._wait_rounds.get(rid, 0)
+
+    def tenant_inflight_tokens(self, tenant: str) -> int:
+        """Footprint tokens (prompt + full generation grant,
+        ``core/slo.py``) `tenant` currently holds in flight: requests
+        occupying decode slots or prefill streams, plus this round's
+        earlier admits (not yet placed by the engine).  The quantity
+        ``DeadlineAdmission.holds`` charges quotas against and the
+        ``tenant_quota`` sanitizer invariant re-derives."""
+        seen: set = set()
+        total = 0
+        for cont in (self.eng.slots, self.eng.streams):
+            for s in cont:
+                if s is None or s.req.rid in seen:
+                    continue
+                seen.add(s.req.rid)
+                if self.eng.effective_slo(s.req).tenant == tenant:
+                    total += request_footprint(s.req)
+        for r in self._round_admits:
+            if r.rid not in seen:
+                seen.add(r.rid)
+                if self.eng.effective_slo(r).tenant == tenant:
+                    total += request_footprint(r)
+        return total
 
     # ------------------------------------------------------------ queue ----
     def submit(self, req) -> None:
@@ -185,6 +214,7 @@ class Scheduler:
             override = True
         self.waiting.remove(r)
         self._wait_rounds.pop(r.rid, None)
+        self._round_admits.append(r)
         self.alloc.begin_admission(r.rid)
         self.eng.register_inflight(r)
         if self.eng.sanitizer is not None:
@@ -204,6 +234,7 @@ class Scheduler:
                             # trie walks / reorder-hold counters) entirely
         budget = self.alloc.n_free - self.watermark_pages
         self._round_probes = {}
+        self._round_admits = []
         for r in self.admission.order(self):
             if len(out) >= limit:
                 break

@@ -240,7 +240,7 @@ def test_sanitizer_flags_contract_breaking_plan(setup):
     model, params = setup
 
     class _DropsDecodes:
-        def plan(self, remaining, n_decode_tokens):
+        def plan(self, remaining, n_decode_tokens, priorities=None):
             return ChunkPlan(tuple(0 for _ in remaining),
                              max(n_decode_tokens - 1, 0),
                              BASE.chunk_tokens, BASE.chunk_tokens)

@@ -67,6 +67,27 @@ def hot_step(params, tokens):
 def hot_step_inline(params, tokens):
     import jax
     return jax.jit(lambda p: p)(params)   # RPR006 (immediately invoked)
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 0.0
+    top_k: int = 0                        # RPR009 (never validated)
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(self.temperature)
+
+
+@dataclass
+class TenantTier:
+    name: str = "gold"
+    quota_tokens: int = 0                 # RPR009 (registry-loop misses it)
+
+    def __post_init__(self):
+        for knob in ("name",):
+            if not getattr(self, knob):
+                raise ValueError(knob)
 '''
 
 KERNEL_FIXTURE = '''\
@@ -111,7 +132,10 @@ def test_every_rule_fires_on_seeded_fixture(tmp_path):
     findings = lint.lint_paths([str(f), str(kf)])
     assert {x.code for x in findings} == {
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005",
-        "RPR006", "RPR007", "RPR008"}
+        "RPR006", "RPR007", "RPR008", "RPR009"}
+    # both RPR009 target classes fire (self.<attr> and registry-loop
+    # mention styles are each exercised without suppressing the finding)
+    assert sum(1 for x in findings if x.code == "RPR009") == 2
     # both mutable-default shapes (arg literal + dataclass call) are hit
     assert sum(1 for x in findings if x.code == "RPR001") == 2
     # both jit-in-hot-path shapes (in-function + immediately-invoked)

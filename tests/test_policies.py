@@ -338,7 +338,7 @@ def test_policy_knobs_validated():
         ServeConfig(preempt_policy="oldest")
     with pytest.raises(ValueError, match="sched_events_cap"):
         ServeConfig(sched_events_cap=0)
-    assert set(PREEMPT_POLICIES) == {"latest", "cache_aware"}
+    assert set(PREEMPT_POLICIES) == {"latest", "cache_aware", "deadline"}
 
 
 def test_eviction_policy_inherits_legacy_knob(setup):

@@ -1,0 +1,411 @@
+"""SLO-aware deadline scheduling: unit + end-to-end proofs.
+
+Covers the deadline admission/preemption policies and the SLO plumbing
+around them:
+
+* slack-ranked (EDF) admission ordering, with exact FCFS degeneration —
+  and **zero clock reads** — when no waiting request carries a deadline;
+* per-tenant token quotas: the hold predicate's single-oversized-request
+  progress exemption, and the end-to-end regression that a quota bounds
+  a burst tenant's head-of-line damage (the gold request's TTFT drops
+  when the quota engages, same workload otherwise);
+* max-slack preemption victims vs the ``latest`` oracle, including the
+  all-infinite-slack degeneration;
+* the headline invariant: deadline policies change *when* work happens,
+  never *what* — greedy streams stay oracle-exact across all four modes
+  when no deadline binds, under the step-level sanitizer;
+* a hypothesis interleaving arm randomizing tenant mixes and quotas;
+* mutation-style proof that the sanitizer's ``tenant_quota`` check is
+  live (disable the hold → the checker must fail the run).
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.analysis.invariants import InvariantViolation
+from repro.configs import ServeConfig
+from repro.configs.base import TenantTier
+from repro.core.engine import Engine, Request, SamplingParams
+from repro.core.policies import (DeadlineAdmission, DeadlinePreempt,
+                                 LatestPreempt)
+from repro.core.slo import (SLOParams, request_footprint, resolve_slo,
+                            slo_outcome)
+
+ARCH = "qwen3-0.6b"
+PS = 4
+MODES = ("sequential", "splitwiser", "splitwiser_mps", "chunked")
+
+TIERS = (TenantTier("gold", ttft_target=0.05, tbt_target=0.5, weight=4.0),
+         TenantTier("batch", quota_tokens=40))
+BASE = ServeConfig(max_batch=3, page_size=PS, n_pages=26,
+                   max_pages_per_seq=12, prefill_chunk=PS, n_streams=2,
+                   enable_prefix_cache=True, admission_policy="deadline",
+                   preempt_policy="deadline", tenants=TIERS)
+
+
+class _CountingClock:
+    def __init__(self, tick: float = 1e-4):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = reduced_model(ARCH)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _req(rid, n=8, *, tenant="default", arrival=None, n_new=4, base=100):
+    return Request(rid=rid, prompt=list(range(base, base + n)),
+                   arrival=arrival, sampling=SamplingParams(max_new_tokens=n_new),
+                   slo=SLOParams(tenant=tenant))
+
+
+# ------------------------------------------------------- params + tiers ---
+def test_slo_params_validation():
+    assert SLOParams().has_target is False
+    assert SLOParams(ttft_target=0.5).has_target
+    for bad in (dict(ttft_target=0.0), dict(ttft_target=-1),
+                dict(tbt_target="fast"), dict(tbt_target=True),
+                dict(tenant=""), dict(tenant=7)):
+        with pytest.raises((TypeError, ValueError)):
+            SLOParams(**bad)
+
+
+def test_tenant_tier_validation():
+    for bad in (dict(name=""), dict(name="a", ttft_target=0),
+                dict(name="a", quota_tokens=0),
+                dict(name="a", quota_tokens=1.5),
+                dict(name="a", weight=0), dict(name="a", weight=-2)):
+        with pytest.raises((TypeError, ValueError)):
+            TenantTier(**bad)
+    with pytest.raises(ValueError):       # duplicate tenant names
+        dataclasses.replace(BASE, tenants=(TenantTier("a"), TenantTier("a")))
+    with pytest.raises(ValueError):
+        dataclasses.replace(BASE, slo_page_cost=-0.1)
+
+
+def test_resolve_slo_request_overrides_tier():
+    tiers = {t.name: t for t in TIERS}
+    eff = resolve_slo(SLOParams(tenant="gold"), tiers)
+    assert (eff.ttft_target, eff.tbt_target, eff.weight) == (0.05, 0.5, 4.0)
+    # explicit request target wins over the tier's; quota/weight are
+    # tier-only knobs
+    eff = resolve_slo(SLOParams(tenant="gold", ttft_target=0.01), tiers)
+    assert eff.ttft_target == 0.01 and eff.weight == 4.0
+    # unknown-tenant and default-tenant requests resolve deadline-free
+    assert not resolve_slo(SLOParams(tenant="other"), tiers).has_deadline
+    assert resolve_slo(SLOParams(), {}).quota_tokens is None
+
+
+def test_slo_outcome_semantics():
+    eff = resolve_slo(SLOParams(tenant="gold"), {t.name: t for t in TIERS})
+    assert slo_outcome(0.01, 0.1, eff) is True
+    assert slo_outcome(0.06, 0.1, eff) is False      # TTFT blown
+    assert slo_outcome(0.01, 0.6, eff) is False      # worst gap blown
+    assert slo_outcome(None, None, eff) is False     # never started
+    no = resolve_slo(SLOParams(), {})
+    assert slo_outcome(0.01, 0.1, no) is None        # nothing to judge
+
+
+# ------------------------------------------------- admission ordering ----
+def test_deadline_admission_orders_by_slack(setup):
+    model, params = setup
+    clock = _CountingClock()
+    eng = Engine(model, params, BASE, time_fn=clock)
+    late = _req(0, tenant="gold", arrival=0.30, base=10)
+    early = _req(1, tenant="gold", arrival=0.01, base=30)
+    free = _req(2, arrival=0.0, base=50)             # no deadline: back
+    for r in (free, late, early):
+        eng.submit(r)
+    out = DeadlineAdmission().order(eng.sched)
+    # EDF: earlier deadline (arrival + target) first; deadline-free last
+    assert [r.rid for r in out] == [1, 0, 2]
+    assert eng.metrics.policy_counters["admission_reorders"] == 1
+
+
+def test_slo_page_cost_charges_expensive_prefills(setup):
+    """With ``slo_page_cost`` set, slack is debited per page the
+    admission would allocate (the probe/``admission_pages`` predictor):
+    of two equal-deadline requests the page-hungry one has *less* true
+    slack — servicing it takes longer — so it is admitted earlier."""
+    model, params = setup
+    def order_with(serve):
+        eng = Engine(model, params, serve, time_fn=_CountingClock())
+        small = _req(0, n=4, tenant="gold", arrival=0.0, base=10)
+        big = _req(1, n=40, tenant="gold", arrival=0.0, base=100)
+        for r in (small, big):            # fcfs order: small first
+            eng.submit(r)
+        return [r.rid for r in DeadlineAdmission().order(eng.sched)]
+
+    # page cost promotes the page-hungry request past an equal deadline
+    assert order_with(dataclasses.replace(BASE, slo_page_cost=0.01)) == [1, 0]
+    # cost off: equal slack, (arrival, rid) tie-break keeps fcfs order
+    assert order_with(BASE) == [0, 1]
+
+
+def test_deadline_admission_degenerates_to_fcfs_clock_free(setup):
+    model, params = setup
+    clock = _CountingClock()
+    eng = Engine(model, params, BASE, time_fn=clock)
+    for i in range(3):                    # batch tier: quota, no deadline
+        eng.submit(_req(i, tenant="batch", arrival=float(i), base=10 * i))
+    t_before = clock.t
+    out = DeadlineAdmission().order(eng.sched)
+    assert [r.rid for r in out] == [0, 1, 2]          # exact FCFS
+    assert clock.t == t_before                        # zero clock reads
+    assert "admission_reorders" not in eng.metrics.policy_counters
+
+
+def test_quota_hold_exempts_single_oversized_request(setup):
+    model, params = setup
+    eng = Engine(model, params, BASE)
+    pol = DeadlineAdmission()
+    big = _req(0, n=60, tenant="batch", n_new=8)      # footprint 68 > 40
+    assert request_footprint(big) == 68
+    # idle tenant: oversized request still admits (progress exemption)
+    assert pol.holds(eng.sched, big) is False
+    # once anything of the tenant is in flight, the quota binds
+    eng.sched._round_admits.append(_req(9, n=8, tenant="batch"))
+    assert pol.holds(eng.sched, big) is True
+    assert eng.metrics.policy_counters["quota_holds"] == 1
+    # other tenants are untouched by batch's quota
+    assert pol.holds(eng.sched, _req(5, tenant="gold")) is False
+
+
+def test_quota_bounds_burst_head_of_line_damage(setup):
+    """Regression: four long batch requests land at t=0, a gold request
+    right behind them.  Without a quota the burst fills every slot and
+    gold's first token waits out a full batch completion; with the quota
+    the burst admits throttled and gold starts strictly earlier, at
+    identical token streams."""
+    model, params = setup
+
+    def run(tenants):
+        sc = dataclasses.replace(BASE, mode="sequential", tenants=tenants,
+                                 n_pages=64)
+        eng = Engine(model, params, sc, time_fn=_CountingClock())
+        reqs = [_req(i, n=24, tenant="batch", arrival=0.0, n_new=8,
+                     base=30 * i) for i in range(4)]
+        reqs.append(_req(9, n=8, tenant="gold", arrival=0.001, base=200))
+        eng.run(reqs, open_loop=True, max_steps=20_000)
+        assert eng.metrics.summary()["n_done"] == 5
+        return eng.metrics.req(9).ttft, [r.out_tokens for r in reqs]
+
+    quota = (TIERS[0], TenantTier("batch", quota_tokens=64))
+    no_quota = (TIERS[0], TenantTier("batch"))
+    ttft_q, toks_q = run(quota)
+    ttft_nq, toks_nq = run(no_quota)
+    assert ttft_q < ttft_nq                 # the quota caps the damage
+    assert toks_q == toks_nq                # ordering-only: same streams
+
+
+# ----------------------------------------------------- preempt victims ----
+def test_deadline_preempt_spares_tight_slack_victim(setup):
+    """Latest arrival is the gold request with the tightest deadline:
+    ``latest`` evicts it, ``deadline`` spares it and takes the
+    infinite-slack batch request instead."""
+    model, params = setup
+    eng = Engine(model, params, BASE, time_fn=_CountingClock())
+    batch = _req(0, tenant="batch", arrival=0.0, base=10)
+    gold = _req(1, tenant="gold", arrival=1.0, base=30)
+    for r in (batch, gold):
+        eng.alloc.alloc(r.rid, 2)
+        eng.metrics.req(r.rid)
+    cands = [("slot", 0, batch, 8), ("slot", 1, gold, 8)]
+    assert LatestPreempt().select(list(cands), eng) == ("slot", 1)
+    assert DeadlinePreempt().select(list(cands), eng) == ("slot", 0)
+    assert eng.metrics.policy_counters["deadline_spared_preemptions"] == 1
+
+
+def test_deadline_preempt_tbt_binds_after_first_token(setup):
+    """Once a request has emitted tokens its binding deadline switches
+    to TBT: the decoding gold request with a stale last token becomes
+    urgent, and the still-prefilling one (TTFT slack ahead) is evicted."""
+    model, params = setup
+    clock = _CountingClock()
+    tight = dataclasses.replace(
+        BASE, tenants=(TenantTier("gold", ttft_target=0.05,
+                                  tbt_target=0.02), TIERS[1]))
+    eng = Engine(model, params, tight, time_fn=clock)
+    decoding = _req(0, tenant="gold", arrival=0.0, base=10)
+    prefilling = _req(1, tenant="gold", arrival=0.4, base=30)
+    for r in (decoding, prefilling):
+        eng.alloc.alloc(r.rid, 2)
+    m = eng.metrics.req(decoding.rid)
+    m.t_first_token = 0.01
+    m.token_times = [0.01]                 # stale: TBT deadline 0.03
+    eng.metrics.req(prefilling.rid)        # TTFT deadline 0.4 + 0.05
+    clock.t = 0.42                         # prefilling has more slack
+    assert DeadlinePreempt().select(
+        [("slot", 0, decoding, 8), ("slot", 1, prefilling, 8)],
+        eng) == ("slot", 1)
+
+
+def test_deadline_preempt_degenerates_without_deadlines(setup):
+    """All-infinite slack: the choice falls back to the cache-aware
+    fraction and then latest — and reads the clock zero times."""
+    model, params = setup
+    clock = _CountingClock()
+    eng = Engine(model, params, BASE, time_fn=clock)
+    reqs = [_req(i, tenant="batch", arrival=float(i), base=20 * i)
+            for i in range(3)]
+    for r in reqs:
+        eng.alloc.alloc(r.rid, 2)
+        eng.metrics.req(r.rid)
+    cands = [("slot", i, r, 8) for i, r in enumerate(reqs)]
+    t_before = clock.t
+    assert (DeadlinePreempt().select(list(cands), eng)
+            == LatestPreempt().select(list(cands), eng) == ("slot", 2))
+    assert clock.t == t_before
+    assert "deadline_spared_preemptions" not in eng.metrics.policy_counters
+
+
+# ------------------------------------------------- no-deadline identity ---
+def _mixed_tenant_reqs(vocab, seed=0):
+    rng = np.random.RandomState(seed)
+    prompts = [list(rng.randint(2, vocab, size=rng.randint(8, 18)))
+               for _ in range(6)]
+    return [Request(rid=i, prompt=p,
+                    sampling=SamplingParams(max_new_tokens=6),
+                    slo=SLOParams(tenant="batch" if i % 2 else "default"))
+            for i, p in enumerate(prompts)]
+
+
+def test_no_deadline_bit_identity_across_modes(setup):
+    """Deadline policies + quota'd tiers but zero deadlines anywhere:
+    every mode's greedy streams must match the fcfs/latest sequential
+    oracle token for token, under the step sanitizer (which runs the
+    tenant-quota check every step)."""
+    model, params = setup
+    vocab = model.cfg.vocab_size
+    oracle_serve = dataclasses.replace(
+        BASE, mode="sequential", n_pages=128, admission_policy="fcfs",
+        preempt_policy="latest", tenants=(), enable_prefix_cache=False)
+    oracle_reqs = _mixed_tenant_reqs(vocab)
+    Engine(model, params, oracle_serve).run(oracle_reqs, max_steps=8000)
+    oracle = [r.out_tokens for r in oracle_reqs]
+    tiers = (TenantTier("batch", quota_tokens=60),)
+    for mode in MODES:
+        serve = dataclasses.replace(BASE, mode=mode, tenants=tiers,
+                                    sanitize_level="step")
+        eng = Engine(model, params, serve)
+        reqs = _mixed_tenant_reqs(vocab)
+        s = eng.run(reqs, max_steps=8000).summary()
+        assert s["n_done"] == len(reqs), mode
+        assert [r.out_tokens for r in reqs] == oracle, mode
+        assert eng.alloc.n_allocated == 0 and eng.idle()
+
+
+# ------------------------------------------------------ metrics rollups ---
+def test_summary_rollups_and_attainment(setup):
+    model, params = setup
+    sc = dataclasses.replace(BASE, mode="sequential", n_pages=64,
+                             tenants=(TenantTier("gold", ttft_target=50.0,
+                                                 tbt_target=50.0),))
+    eng = Engine(model, params, sc)
+    eng.run([_req(0, tenant="gold"), _req(1, tenant="gold"), _req(2)],
+            max_steps=8000)
+    s = eng.metrics.summary()
+    # wall-clock targets of 50s are unmissable on a test box
+    assert s["slo_attained"] == 2 and s["slo_missed"] == 0
+    assert s["slo_attainment"] == 1.0
+    assert set(s["tenants"]) == {"gold", "default"}
+    g = s["tenants"]["gold"]
+    assert g["n_done"] == 2 and g["slo_attainment"] == 1.0
+    assert g["ttft_p99"] >= g["ttft_p50"] > 0
+
+
+def test_single_tenant_summary_shape_unchanged(setup):
+    """No tiers, no SLOs: the rollup dict stays empty and nothing is
+    judged — existing summary consumers see byte-identical shapes."""
+    model, params = setup
+    sc = dataclasses.replace(BASE, mode="sequential", n_pages=64,
+                             tenants=(), admission_policy="fcfs",
+                             preempt_policy="latest")
+    eng = Engine(model, params, sc)
+    eng.run([_req(0), _req(1)], max_steps=8000)
+    s = eng.metrics.summary()
+    assert s["tenants"] == {}
+    assert s["slo_attained"] == 0 and s["slo_missed"] == 0
+    assert s["slo_attainment"] is None
+
+
+# ------------------------------------------------- sanitizer mutation ----
+def test_tenant_quota_sanitizer_catches_disabled_hold(setup, monkeypatch):
+    """Mutation proof: neuter the quota hold and the step sanitizer's
+    ``tenant_quota`` check must fail the run (two batch requests over
+    the 40-token quota in flight together)."""
+    model, params = setup
+    monkeypatch.setattr(DeadlineAdmission, "holds",
+                        lambda self, sched, req: False)
+    sc = dataclasses.replace(BASE, mode="sequential", n_pages=64,
+                             sanitize_level="step")
+    eng = Engine(model, params, sc)
+    reqs = [_req(i, n=24, tenant="batch", n_new=8, base=30 * i)
+            for i in range(3)]
+    with pytest.raises(InvariantViolation) as e:
+        eng.run(reqs, max_steps=8000)
+    assert e.value.invariant == "tenant_quota"
+
+
+# -------------------------------------------------- hypothesis sweep ----
+# the rest of this module must not skip when hypothesis is absent, so
+# only this arm is gated (module-level importorskip would drop it all)
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None, derandomize=True,
+        database=None, print_blob=False)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):                                 # no-op placeholders
+        return lambda fn: fn
+
+    class settings:                                  # type: ignore[no-redef]
+        def __init__(self, **kw):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+    class st:                                        # type: ignore[no-redef]
+        integers = sampled_from = staticmethod(lambda *a, **k: None)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@given(seed=st.integers(0, 40), quota=st.integers(24, 120),
+       mode=st.sampled_from(MODES))
+@settings(max_examples=20, deadline=None)
+def test_random_tenant_interleavings_stay_oracle_exact(setup, seed, quota,
+                                                       mode):
+    """Any tenant mix x quota x mode: deadline policies without deadlines
+    never change a token, under the step sanitizer on a pressured pool."""
+    model, params = setup
+    vocab = model.cfg.vocab_size
+    oracle_serve = dataclasses.replace(
+        BASE, mode="sequential", n_pages=128, admission_policy="fcfs",
+        preempt_policy="latest", tenants=(), enable_prefix_cache=False)
+    oracle_reqs = _mixed_tenant_reqs(vocab, seed)
+    Engine(model, params, oracle_serve).run(oracle_reqs, max_steps=8000)
+    oracle = [r.out_tokens for r in oracle_reqs]
+    serve = dataclasses.replace(
+        BASE, mode=mode, sanitize_level="step",
+        tenants=(TenantTier("batch", quota_tokens=quota),))
+    eng = Engine(model, params, serve)
+    reqs = _mixed_tenant_reqs(vocab, seed)
+    s = eng.run(reqs, max_steps=8000).summary()
+    assert s["n_done"] == len(reqs)
+    assert [r.out_tokens for r in reqs] == oracle
